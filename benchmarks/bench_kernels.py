@@ -1,0 +1,70 @@
+"""Pallas kernel benches (interpret mode on CPU = correctness-scale timings;
+the BlockSpec tiling is the TPU deliverable).  Reports kernel vs jnp-oracle
+wall time and the analytic v5e roofline time for each shape."""
+from __future__ import annotations
+
+import csv
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready(), out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main(writer=None) -> None:
+    own = writer is None
+    if own:
+        writer = csv.writer(sys.stdout)
+        writer.writerow(["name", "us_per_call", "derived"])
+
+    rng = np.random.default_rng(0)
+    # gram: paper Eqn. 5.1 covariance formation
+    for n, d in ((512, 256), (1024, 512)):
+        x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        t_ref = _time(lambda a: ref.gram_ref(a), x)
+        t_k = _time(lambda a: ops.gram(a, interpret=True), x)
+        flops = 2 * n * d * d
+        v5e = max(flops / PEAK_FLOPS, (n * d + d * d) * 4 / HBM_BW)
+        writer.writerow([f"kernel/gram/{n}x{d}", f"{t_k * 1e6:.1f}",
+                         f"ref_us={t_ref * 1e6:.1f};"
+                         f"v5e_roofline_us={v5e * 1e6:.2f}"])
+    # power_matmul: Alg. 1 local power step
+    for d, k in ((512, 8), (1024, 32)):
+        a = jnp.asarray(rng.standard_normal((d, d)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((d, k)), jnp.float32)
+        t_ref = _time(lambda *z: ref.power_matmul_ref(*z), a, w)
+        t_k = _time(lambda *z: ops.power_matmul(*z, interpret=True), a, w)
+        flops = 2 * d * d * k
+        v5e = max(flops / PEAK_FLOPS, (d * d + 2 * d * k) * 4 / HBM_BW)
+        writer.writerow([f"kernel/power_matmul/{d}x{k}", f"{t_k * 1e6:.1f}",
+                         f"ref_us={t_ref * 1e6:.1f};"
+                         f"v5e_roofline_us={v5e * 1e6:.2f}"])
+    # flash attention
+    for s, hd in ((256, 64),):
+        q = jnp.asarray(rng.standard_normal((1, 4, s, hd)), jnp.float32)
+        kv = jnp.asarray(rng.standard_normal((1, 4, s, hd)), jnp.float32)
+        t_ref = _time(lambda *z: ref.mha_ref(*z), q, kv, kv)
+        t_k = _time(lambda *z: ops.flash_attention(
+            *z, block_q=64, block_kv=64, interpret=True), q, kv, kv)
+        flops = 4 * 4 * s * s * hd
+        v5e = flops / PEAK_FLOPS
+        writer.writerow([f"kernel/flash/{s}x{hd}", f"{t_k * 1e6:.1f}",
+                         f"ref_us={t_ref * 1e6:.1f};"
+                         f"v5e_roofline_us={v5e * 1e6:.2f}"])
+
+
+if __name__ == "__main__":
+    main()

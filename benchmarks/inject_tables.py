@@ -1,0 +1,19 @@
+import io, re, subprocess, sys
+def table(mesh):
+    out = subprocess.run([sys.executable, "-m", "benchmarks.roofline_report",
+                          "--out", "results/dryrun_final", "--mesh", mesh],
+                         capture_output=True, text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    return out.stdout
+import os
+os.environ.setdefault("PYTHONPATH", "src")
+single = subprocess.run([sys.executable, "-m", "benchmarks.roofline_report",
+                         "--out", "results/dryrun_final", "--mesh", "single"],
+                        capture_output=True, text=True).stdout
+multi = subprocess.run([sys.executable, "-m", "benchmarks.roofline_report",
+                        "--out", "results/dryrun_final", "--mesh", "multi"],
+                       capture_output=True, text=True).stdout
+txt = open("EXPERIMENTS.md").read()
+txt = txt.replace("<!-- ROOFLINE_TABLE_SINGLE -->", single)
+txt = txt.replace("<!-- ROOFLINE_TABLE_MULTI -->", multi)
+open("EXPERIMENTS.md", "w").write(txt)
+print("injected", len(single.splitlines()), len(multi.splitlines()))

@@ -1,0 +1,68 @@
+"""Render the EXPERIMENTS.md roofline table from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = [r for r in load(args.out) if r.get("mesh") == args.mesh]
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    print("| arch | shape | compute | memory | collective | bottleneck |"
+          " MFU | useful FLOPs | HBM/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    mfus = []
+    for r in recs:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — |"
+                  f" skipped: sub-quadratic-only cell | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | ERROR | | | "
+                  f"{r['error'][:60]} | | | |")
+            continue
+        hbm = (r.get("temp_bytes") or 0) + (r.get("arg_bytes") or 0)
+        if r["shape"].startswith("train"):
+            mfus.append(r["mfu"])
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} |"
+              f" {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} |"
+              f" {r['bottleneck']} | {r['mfu']:.3f} |"
+              f" {r['useful_flops_ratio']:.2f} | {hbm / 1e9:.1f}GB |")
+    if mfus:
+        import math
+        gm = math.exp(sum(math.log(max(m, 1e-6)) for m in mfus) / len(mfus))
+        print(f"\ntrain-cell MFU: geomean {gm:.3f}, "
+              f"max {max(mfus):.3f} over {len(mfus)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV to stdout.
+
+  bench_deepca      -- paper Figs. 1-2 (DeEPCA/DePCA/CPCA, K sweep, 3 metrics)
+  bench_mixing      -- Prop. 1 (FastMix vs naive gossip contraction)
+  bench_kernels     -- Pallas kernels vs jnp oracle + v5e roofline
+  bench_compression -- DeEPCA-PowerSGD wire bytes + fidelity
+"""
+from __future__ import annotations
+
+import csv
+import sys
+
+
+def main() -> None:
+    from . import bench_compression, bench_deepca, bench_kernels, bench_mixing
+    writer = csv.writer(sys.stdout)
+    writer.writerow(["name", "us_per_call", "derived"])
+    bench_mixing.main(writer)
+    bench_kernels.main(writer)
+    bench_compression.main(writer)
+    bench_deepca.main(writer)
+
+
+if __name__ == "__main__":
+    main()

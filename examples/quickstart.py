@@ -1,0 +1,32 @@
+"""Quickstart: decentralized PCA with DeEPCA in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (centralized_power_method, deepca, erdos_renyi,
+                        synthetic_spiked, top_k_eigvecs)
+
+# 1. data: 20 agents, each holding a 64-dim data shard (A_j = X_j^T X_j)
+m, d, k = 20, 64, 4
+ops = synthetic_spiked(m, d, k, n_per_agent=80, seed=0, heterogeneity=2.0)
+U, evals = top_k_eigvecs(ops.mean_matrix(), k)
+
+# 2. gossip network: Erdos-Renyi p=0.5 (the paper's Section 5 setting)
+topo = erdos_renyi(m, p=0.5, seed=0)
+print(f"network: m={topo.m}, spectral gap 1-lambda2 = {topo.spectral_gap:.4f}")
+
+# 3. run DeEPCA (Alg. 1): T power iterations, K gossip rounds each
+rng = np.random.default_rng(1)
+W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((d, k)))[0], jnp.float32)
+res = deepca(ops, topo, W0, k=k, T=60, K=6, U=U)
+
+# 4. every agent now holds the top-k principal components of the GLOBAL
+#    covariance, having only ever talked to its graph neighbours:
+print(f"final mean tan theta_k(U, W_j) = {float(res.trace.mean_tan_theta[-1]):.2e}")
+print(f"consensus error ||W - W_bar|| = {float(res.trace.w_consensus[-1]):.2e}")
+print(f"total communication rounds    = {int(res.trace.comm_rounds[-1])}")
+
+cen = centralized_power_method(ops.mean_matrix(), W0, iters=60, U=U)
+print(f"centralized PCA after 60 iters = {float(cen['tan_theta'][-1]):.2e}")

@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch xlstm_350m
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--batch", type=int, default=4)
+    a = ap.parse_args()
+    # delegate to the production serve launcher with a reduced config
+    sys.exit(subprocess.call([
+        sys.executable, "-m", "repro.launch.serve", "--arch", a.arch,
+        "--reduced", "--batch", str(a.batch),
+        "--prompt-len", "32", "--gen", "16"]))

@@ -1,0 +1,92 @@
+"""Train an LM with DeEPCA-compressed decentralized gradient averaging.
+
+Simulates m data-parallel workers (stacked axis), each computing gradients
+on its own shard of the token stream; gradients are exchanged ONLY through
+rank-r subspace-tracked gossip (the paper's Alg. 1 applied to PowerSGD
+factors) — no all-reduce anywhere.  Compares loss vs the exact-all-reduce
+baseline.
+
+    PYTHONPATH=src python examples/train_lm_compressed.py --steps 60
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.compression import DeEPCACompressor
+from repro.configs import get_reduced
+from repro.core import erdos_renyi
+from repro.data import SyntheticTokenStream, TokenStreamConfig
+from repro.models import init_params, loss_fn
+from repro.optim import AdamW
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--K", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = get_reduced("smollm_135m")
+    m = args.workers
+    topo = erdos_renyi(m, p=0.7, seed=0)
+    stream = SyntheticTokenStream(TokenStreamConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch * m))
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(lr=3e-3)
+
+    @jax.jit
+    def worker_grads(params, batch):
+        """Per-worker grads: batch (m, b, s) -> stacked grad pytree."""
+        def one(tok, lab):
+            return jax.grad(
+                lambda p: loss_fn(cfg, p, {"tokens": tok, "labels": lab})
+            )(params)
+        return jax.vmap(one)(batch["tokens"], batch["labels"])
+
+    def run(compressed: bool):
+        p = jax.tree.map(jnp.copy, params)
+        state = opt.init(p)
+        comp = DeEPCACompressor(topology=topo, rank=args.rank, K=args.K,
+                                min_dim=16)
+        cstate = None
+        losses = []
+        it = iter(stream)
+        stream.seek(0)
+        for step in range(args.steps):
+            raw = next(it)
+            batch = {k: jnp.asarray(v.reshape(m, args.batch, args.seq))
+                     for k, v in raw.items()}
+            g = worker_grads(p, batch)
+            if compressed:
+                if cstate is None:
+                    cstate = comp.init(g)
+                g, cstate = comp(g, cstate)
+                g0 = jax.tree.map(lambda a: a[0], g)   # any worker's copy
+            else:
+                g0 = jax.tree.map(lambda a: jnp.mean(a, 0), g)
+            p, state = opt.update(g0, state, p)
+            if (step + 1) % 10 == 0:
+                l = float(loss_fn(cfg, p, {
+                    "tokens": batch["tokens"][0], "labels": batch["labels"][0]}))
+                losses.append(l)
+                print(f"  step {step + 1:3d} loss {l:.4f}")
+        return losses
+
+    print("== exact all-reduce baseline ==")
+    base = run(False)
+    print("== DeEPCA-compressed gossip ==")
+    comp_losses = run(True)
+    print(f"\nfinal: baseline={base[-1]:.4f} compressed={comp_losses[-1]:.4f}"
+          f" (gap {comp_losses[-1] - base[-1]:+.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .checkpoint import (save, restore, latest_step, AsyncCheckpointer,
+                         gc_old_checkpoints)

@@ -1,0 +1,2 @@
+from .deepca_powersgd import DeEPCACompressor, CompressionState, LeafState
+from . import sharded

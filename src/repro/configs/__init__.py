@@ -1,0 +1,56 @@
+"""Architecture registry: ``--arch <id>`` selects one of the assigned
+configs (plus the paper's own PCA workload config).
+
+Each ``<id>.py`` module exports ``CONFIG`` (the full published config) and
+``reduced()`` (a tiny same-family config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict
+
+from repro.models.config import ArchConfig
+
+ARCH_IDS = [
+    "llama4_scout_17b_a16e",
+    "deepseek_v2_236b",
+    "smollm_135m",
+    "yi_34b",
+    "phi3_medium_14b",
+    "qwen1_5_110b",
+    "whisper_small",
+    "xlstm_350m",
+    "qwen2_vl_72b",
+    "jamba_1_5_large_398b",
+]
+
+_ALIASES = {
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "smollm-135m": "smollm_135m",
+    "yi-34b": "yi_34b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "whisper-small": "whisper_small",
+    "xlstm-350m": "xlstm_350m",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.reduced()
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

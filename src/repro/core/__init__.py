@@ -1,0 +1,22 @@
+"""DeEPCA core: the paper's contribution as composable JAX modules."""
+from .topology import (Topology, ring, torus2d, hypercube, complete,
+                       erdos_renyi, make_topology, validate_mixing)
+from .mixing import fastmix, naive_mix, fastmix_eta, consensus_error, mixer
+from .operators import (StackedOperators, synthetic_spiked, libsvm_like,
+                        top_k_eigvecs)
+from .algorithms import (deepca, depca, centralized_power_method, sign_adjust,
+                         DecentralizedPCAResult, PowerTrace,
+                         theory_consensus_rounds)
+from .gossip_shard import DistributedDeEPCA, make_round_fn, fastmix_local
+from . import metrics
+
+__all__ = [
+    "Topology", "ring", "torus2d", "hypercube", "complete", "erdos_renyi",
+    "make_topology", "validate_mixing",
+    "fastmix", "naive_mix", "fastmix_eta", "consensus_error", "mixer",
+    "StackedOperators", "synthetic_spiked", "libsvm_like", "top_k_eigvecs",
+    "deepca", "depca", "centralized_power_method", "sign_adjust",
+    "DecentralizedPCAResult", "PowerTrace", "theory_consensus_rounds",
+    "DistributedDeEPCA", "make_round_fn", "fastmix_local",
+    "metrics",
+]

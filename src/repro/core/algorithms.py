@@ -1,0 +1,208 @@
+"""DeEPCA (Alg. 1), DePCA baseline (Wai et al. 2017) and centralized PCA.
+
+All algorithms run in *stacked* form: agent variables are the leading axis of
+``(m, d, k)`` arrays and gossip is a dense mixing-matrix product.  This form
+is bit-equivalent to the device-distributed `shard_map` runtime in
+:mod:`repro.core.gossip_shard` (tested), and is what the paper-fidelity
+benchmarks use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import metrics
+from .mixing import consensus_error, fastmix, fastmix_eta, naive_mix
+from .operators import StackedOperators, top_k_eigvecs
+from .topology import Topology
+
+
+def sign_adjust(W: jax.Array, W0: jax.Array) -> jax.Array:
+    """Alg. 2: flip column signs of W so <W[:,i], W0[:,i]> >= 0."""
+    s = jnp.sign(jnp.sum(W * W0, axis=-2, keepdims=True))
+    s = jnp.where(s == 0, 1.0, s)
+    return W * s
+
+
+def _qr_orth(S: jax.Array) -> jax.Array:
+    q, _ = jnp.linalg.qr(S)
+    return q
+
+
+class PowerTrace(NamedTuple):
+    """Per-iteration diagnostics (the paper's three reported curves)."""
+
+    s_consensus: jax.Array      # ||S^t - S_bar^t (x) 1||
+    w_consensus: jax.Array      # ||W^t - W_bar^t (x) 1||
+    mean_tan_theta: jax.Array   # (1/m) sum_j tan theta_k(U, W_j^t)
+    tan_theta_mean: jax.Array   # tan theta_k(U, S_bar^t)
+    comm_rounds: jax.Array      # cumulative gossip rounds ( = t*K )
+
+
+@dataclasses.dataclass
+class DecentralizedPCAResult:
+    W: jax.Array                # (m, d, k) final local estimates
+    trace: PowerTrace
+    name: str
+    state: Optional[tuple] = None   # (S, W_stack, G_prev) — resumable
+
+
+def centralized_power_method(A: jax.Array, W0: jax.Array, iters: int,
+                             U: Optional[jax.Array] = None) -> Dict:
+    """Reference centralized PCA (power method with QR), Golub & Van Loan."""
+
+    def body(W, _):
+        Wn = _qr_orth(A @ W)
+        Wn = sign_adjust(Wn, W0)
+        err = metrics.tan_theta_k(U, Wn) if U is not None else jnp.nan
+        return Wn, err
+
+    W, errs = jax.lax.scan(body, W0, None, length=iters)
+    return {"W": W, "tan_theta": errs}
+
+
+def _make_trace(ops: StackedOperators, U: jax.Array,
+                S: jax.Array, W: jax.Array, rounds: int) -> Dict[str, jax.Array]:
+    Sbar = jnp.mean(S, axis=0)
+    return {
+        "s_consensus": consensus_error(S),
+        "w_consensus": consensus_error(W),
+        "mean_tan_theta": metrics.mean_tan_theta(U, W),
+        "tan_theta_mean": metrics.tan_theta_k(U, Sbar),
+        "comm_rounds": jnp.asarray(rounds, dtype=jnp.float32),
+    }
+
+
+def deepca(ops: StackedOperators, topology: Topology, W0: jax.Array, *,
+           k: int, T: int, K: int, U: Optional[jax.Array] = None,
+           accelerate: bool = True,
+           state: Optional[tuple] = None) -> DecentralizedPCAResult:
+    """Alg. 1 — Decentralized Exact PCA with subspace tracking.
+
+    Args:
+      ops: stacked local operators A_j (dense or implicit Gram).
+      topology: gossip graph; its mixing matrix is used by FastMix.
+      W0: (d, k) common orthonormal initialisation (all agents identical).
+      T: number of power iterations.
+      K: FastMix rounds per power iteration — independent of target eps
+         (the paper's headline property, Thm. 1 / Eqn. 3.11).
+      U: optional ground-truth top-k eigenvectors for diagnostics.
+      accelerate: FastMix (True) or naive gossip (False) consensus.
+    """
+    m, d = ops.m, ops.d
+    L = jnp.asarray(topology.mixing, dtype=W0.dtype)
+    eta = fastmix_eta(topology.lambda2)
+    if U is None:
+        U, _ = top_k_eigvecs(ops.mean_matrix(), k)
+
+    if state is not None:
+        S, W_stack, G_prev = state     # resume (checkpoint/restart support)
+    else:
+        W_stack = jnp.broadcast_to(W0, (m, d, k))
+        # Alg. 1 line 2: S_j^0 = W^0 and A_j W_j^{-1} := W^0, i.e. G^0 := W^0.
+        S = W_stack
+        G_prev = W_stack
+
+    mix = (lambda X: fastmix(X, L, eta, K)) if accelerate \
+        else (lambda X: naive_mix(X, L, K))
+
+    def step(carry, _):
+        S, W, G_prev = carry
+        G = ops.apply(W)                      # A_j W_j^t  (local compute)
+        S_new = S + G - G_prev                # Eqn. (3.1): subspace tracking
+        S_new = mix(S_new)                    # Eqn. (3.2): FastMix consensus
+        W_new = _qr_orth(S_new)               # Eqn. (3.3): local QR
+        W_new = sign_adjust(W_new, W0)        # Alg. 2
+        return (S_new, W_new, G), (S_new, W_new)
+
+    (S, W_stack, G_prev), (S_hist, W_hist) = jax.lax.scan(
+        step, (S, W_stack, G_prev), None, length=T)
+
+    trace = _collect_trace(ops, U, S_hist, W_hist, K)
+    return DecentralizedPCAResult(W=W_stack, trace=trace, name="DeEPCA",
+                                  state=(S, W_stack, G_prev))
+
+
+def depca(ops: StackedOperators, topology: Topology, W0: jax.Array, *,
+          k: int, T: int, K: int, U: Optional[jax.Array] = None,
+          accelerate: bool = True,
+          increasing_consensus: bool = False) -> DecentralizedPCAResult:
+    """Baseline decentralized power method (Eqn. 3.4; Wai et al. 2017).
+
+    Each power iteration: local step W_j <- A_j W_j, multi-consensus, QR.
+    Without subspace tracking the consensus error floors at a level set by
+    data heterogeneity, so K must grow with 1/eps (Eqn. 3.12).  With
+    ``increasing_consensus=True`` we emulate the practical fix of growing the
+    round count: iteration t uses ``K + t`` rounds (unrolled python loop).
+    """
+    m, d = ops.m, ops.d
+    L = jnp.asarray(topology.mixing, dtype=W0.dtype)
+    eta = fastmix_eta(topology.lambda2)
+    if U is None:
+        U, _ = top_k_eigvecs(ops.mean_matrix(), k)
+
+    W_stack = jnp.broadcast_to(W0, (m, d, k))
+
+    def one_iter(W_stack, rounds: int):
+        G = ops.apply(W_stack)
+        G = fastmix(G, L, eta, rounds) if accelerate else naive_mix(G, L, rounds)
+        W_new = _qr_orth(G)
+        W_new = sign_adjust(W_new, W0)
+        return G, W_new
+
+    if increasing_consensus:
+        S_hist, W_hist, rounds_hist = [], [], []
+        total = 0
+        for t in range(T):
+            rounds = K + t
+            total += rounds
+            S, W_stack = one_iter(W_stack, rounds)
+            S_hist.append(S); W_hist.append(W_stack); rounds_hist.append(total)
+        S_hist = jnp.stack(S_hist); W_hist = jnp.stack(W_hist)
+        trace = _collect_trace(ops, U, S_hist, W_hist, None,
+                               rounds=np.asarray(rounds_hist, dtype=np.float32))
+    else:
+        def step(W_stack, _):
+            S, W_new = one_iter(W_stack, K)
+            return W_new, (S, W_new)
+
+        W_stack, (S_hist, W_hist) = jax.lax.scan(step, W_stack, None, length=T)
+        trace = _collect_trace(ops, U, S_hist, W_hist, K)
+
+    return DecentralizedPCAResult(W=W_stack, trace=trace, name="DePCA")
+
+
+def _collect_trace(ops, U, S_hist, W_hist, K: Optional[int],
+                   rounds: Optional[np.ndarray] = None) -> PowerTrace:
+    T = S_hist.shape[0]
+
+    def per_t(S, W):
+        d = _make_trace(ops, U, S, W, 0)
+        return (d["s_consensus"], d["w_consensus"],
+                d["mean_tan_theta"], d["tan_theta_mean"])
+
+    s_c, w_c, mtt, ttm = jax.vmap(per_t)(S_hist, W_hist)
+    if rounds is None:
+        rounds = np.arange(1, T + 1, dtype=np.float32) * float(K)
+    return PowerTrace(s_consensus=s_c, w_consensus=w_c, mean_tan_theta=mtt,
+                      tan_theta_mean=ttm, comm_rounds=jnp.asarray(rounds))
+
+
+def theory_consensus_rounds(topology: Topology, *, k: int, L: float,
+                            lam_k: float, lam_k1: float,
+                            tan0: float = 1.0) -> int:
+    """Thm. 1's sufficient K (Eqn. 3.11 constants made explicit).
+
+    Returned value is a *sufficient* bound; experiments show far smaller K
+    works (see benchmarks/bench_deepca.py K-sweep).
+    """
+    gap = max(lam_k - lam_k1, 1e-12)
+    gamma = 1.0 - gap / (2.0 * lam_k)
+    num = 96.0 * k * L * (np.sqrt(k) + 1.0) * (lam_k + 2 * L) * (1 + tan0) ** 4
+    den = max(lam_k1, 1e-12) * gap * gamma ** 2
+    return int(np.ceil(np.log(num / den) / np.sqrt(topology.spectral_gap)))

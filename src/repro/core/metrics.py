@@ -1,0 +1,54 @@
+"""Subspace-angle metrics (Definition 1) and convergence diagnostics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _orthonormalize(X: jax.Array) -> jax.Array:
+    q, _ = jnp.linalg.qr(X)
+    return q
+
+
+def principal_angles(U: jax.Array, X: jax.Array) -> jax.Array:
+    """All k principal angles between span(U) (orthonormal) and span(X)."""
+    Q = _orthonormalize(X)
+    s = jnp.linalg.svd(U.T @ Q, compute_uv=False)
+    return jnp.arccos(jnp.clip(s, -1.0, 1.0))
+
+
+def cos_theta_k(U: jax.Array, X: jax.Array) -> jax.Array:
+    """cos of the largest principal angle: sigma_min(U^T Q) (Eqn. 2.2)."""
+    Q = _orthonormalize(X)
+    s = jnp.linalg.svd(U.T @ Q, compute_uv=False)
+    return jnp.min(s)
+
+
+def sin_theta_k(U: jax.Array, X: jax.Array) -> jax.Array:
+    """sin theta_k = || (I - U U^T) Q ||_2 (Eqn. 2.2)."""
+    Q = _orthonormalize(X)
+    P = Q - U @ (U.T @ Q)
+    return jnp.linalg.norm(P, ord=2)
+
+
+def tan_theta_k(U: jax.Array, X: jax.Array) -> jax.Array:
+    """tan theta_k(U, X) = || V^T Q (U^T Q)^{-1} ||_2 (Eqn. 2.2).
+
+    Computed stably as sin/cos from the SVD of ``U^T Q``.
+    """
+    c = cos_theta_k(U, X)
+    s = sin_theta_k(U, X)
+    return s / jnp.maximum(c, 1e-30)
+
+
+def mean_tan_theta(U: jax.Array, W_stack: jax.Array) -> jax.Array:
+    """Paper's reported metric: (1/m) sum_j tan theta_k(U, W_j)."""
+    return jnp.mean(jax.vmap(lambda W: tan_theta_k(U, W))(W_stack))
+
+
+def subspace_distance(U: jax.Array, X: jax.Array) -> jax.Array:
+    """Projection-metric distance ||UU^T - QQ^T||_F / sqrt(2) in [0, sqrt(k)]."""
+    Q = _orthonormalize(X)
+    k = U.shape[1]
+    inner = jnp.linalg.norm(U.T @ Q) ** 2
+    return jnp.sqrt(jnp.clip(k - inner, 0.0, None))

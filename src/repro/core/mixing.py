@@ -1,0 +1,92 @@
+"""Consensus/averaging primitives: naive gossip and FastMix (Alg. 3).
+
+Two execution forms are provided:
+
+* **stacked** — agent-major arrays ``S`` of shape ``(m, ...)``; one process
+  simulates all agents (used by tests, benchmarks and the paper-fidelity
+  experiments).  Mixing is ``einsum('ij,j...->i...', L, S)``.
+* **sharded** — agents live on devices along a named mesh axis; see
+  :mod:`repro.core.gossip_shard` for the `shard_map` version whose ring /
+  torus mixing lowers to `collective_permute` (nearest-neighbour ICI traffic
+  only).
+
+FastMix recursion (Liu & Morse 2011), Proposition 1 of the paper::
+
+    eta = (1 - sqrt(1 - lambda2^2)) / (1 + sqrt(1 - lambda2^2))
+    W^{k+1} = (1 + eta) * L W^k - eta * W^{k-1}
+
+contracting the consensus error by ``(1 - sqrt(1 - lambda2))^K`` after K
+rounds, versus ``lambda2^K`` for naive gossip.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .topology import Topology
+
+
+def fastmix_eta(lambda2: float) -> float:
+    """Chebyshev momentum from Alg. 3 (note: uses lambda2^2)."""
+    s = np.sqrt(max(1.0 - lambda2 ** 2, 0.0))
+    return float((1.0 - s) / (1.0 + s))
+
+
+def _mix_once(L: jax.Array, S: jax.Array) -> jax.Array:
+    """One gossip round in stacked form: out_i = sum_j L_ij S_j."""
+    return jnp.einsum("ij,j...->i...", L, S, precision=jax.lax.Precision.HIGHEST)
+
+
+@functools.partial(jax.jit, static_argnames=("K",))
+def fastmix(S: jax.Array, L: jax.Array, eta: jax.Array | float, K: int) -> jax.Array:
+    """Alg. 3: K rounds of Chebyshev-accelerated gossip in stacked form.
+
+    Args:
+      S: ``(m, ...)`` stacked agent variables.
+      L: ``(m, m)`` mixing matrix.
+      eta: FastMix momentum (``fastmix_eta(lambda2)``).
+      K: number of gossip rounds (static).
+    Returns:
+      ``(m, ...)`` mixed variables; the mean over agents is exactly preserved.
+    """
+    if K <= 0:
+        return S
+
+    def body(_, carry):
+        prev, cur = carry
+        nxt = (1.0 + eta) * _mix_once(L, cur) - eta * prev
+        return (cur, nxt)
+
+    _, out = jax.lax.fori_loop(0, K, body, (S, S))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("K",))
+def naive_mix(S: jax.Array, L: jax.Array, K: int) -> jax.Array:
+    """K rounds of plain gossip ``S <- L S`` (Xiao & Boyd 2004 baseline)."""
+    if K <= 0:
+        return S
+    return jax.lax.fori_loop(0, K, lambda _, x: _mix_once(L, x), S)
+
+
+def consensus_error(S: jax.Array) -> jax.Array:
+    """``|| S - S_bar (x) 1 ||_F`` over the stacked agent axis (axis 0)."""
+    mean = jnp.mean(S, axis=0, keepdims=True)
+    return jnp.linalg.norm((S - mean).reshape(-1))
+
+
+def agent_mean(S: jax.Array) -> jax.Array:
+    return jnp.mean(S, axis=0)
+
+
+def mixer(topology: Topology, K: int, accelerate: bool = True):
+    """Returns ``mix(S) -> S`` closing over a topology (stacked form)."""
+    L = jnp.asarray(topology.mixing, dtype=jnp.float32)
+    eta = fastmix_eta(topology.lambda2)
+    if accelerate:
+        return lambda S: fastmix(S, L, eta, K)
+    return lambda S: naive_mix(S, L, K)

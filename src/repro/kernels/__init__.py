@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's compute hot spots (+ jnp oracles)."""
+from . import ops, ref
+from .ops import gram, power_matmul, flash_attention

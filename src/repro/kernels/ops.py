@@ -1,0 +1,59 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On a machine without TPUs the kernels run in ``interpret=True`` mode (the
+kernel body executes on CPU with identical block semantics); on TPU they
+compile to Mosaic.  ``interpret`` is resolved once at import from the
+default backend, overridable per call.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import gram as _gram
+from . import power_matmul as _pm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gram(x: jax.Array, *, block_d: int = 128, block_n: int = 512,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """Local covariance ``X^T X`` (paper Eqn. 5.1) via the Pallas kernel."""
+    it = _default_interpret() if interpret is None else interpret
+    return _gram.gram(x, block_d=block_d, block_n=block_n, interpret=it)
+
+
+def power_matmul(a: jax.Array, w: jax.Array, *, block_m: int = 512,
+                 block_k: int = 512,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Power-iteration step ``A @ W`` via the Pallas kernel."""
+    it = _default_interpret() if interpret is None else interpret
+    return _pm.power_matmul(a, w, block_m=block_m, block_k=block_k,
+                            interpret=it)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Batched GQA flash attention.
+
+    q: (B, H, Sq, hd); k, v: (B, Hkv, Skv, hd) with H % Hkv == 0.
+    Returns (B, H, Sq, hd).
+    """
+    it = _default_interpret() if interpret is None else interpret
+    b, h, sq, hd = q.shape
+    hkv = k.shape[1]
+    if h % hkv:
+        raise ValueError(f"H={h} not a multiple of Hkv={hkv}")
+    k = jnp.repeat(k, h // hkv, axis=1)
+    v = jnp.repeat(v, h // hkv, axis=1)
+    fn = functools.partial(_fa.flash_attention_single, causal=causal,
+                           block_q=block_q, block_kv=block_kv, interpret=it)
+    return jax.vmap(jax.vmap(fn))(q, k, v)

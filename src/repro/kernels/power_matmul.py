@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: the power-step matmul ``G = A @ W`` (Alg. 1, Eqn. 3.1).
+
+``A`` is (d, d), ``W`` is tall-skinny (d, k) with k in the tens.  TPU
+adaptation: k is padded to the 128 MXU lane width once, then the kernel
+streams (bm x bk) tiles of A against resident (bk x kp) panels of W.  The
+innermost grid axis is the contraction; the (bm x kp) output block stays in
+VMEM across it.
+
+For k << 128 the MXU is underfed on one side; that is inherent to power
+iterations — the roofline for this op is HBM-bound (reads d^2 words to do
+2 d^2 k flops -> arithmetic intensity 2k flops/word), and the kernel's job
+is to stream A at full HBM bandwidth, which block (512, 512) tiles achieve.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _power_kernel(a_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_k", "interpret"))
+def power_matmul(a: jax.Array, w: jax.Array, *, block_m: int = 512,
+                 block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """(d, d) @ (d, k) -> (d, k), fp32 accumulation, k padded to 128."""
+    d, d2 = a.shape
+    dk, k = w.shape
+    assert d == d2 == dk, (a.shape, w.shape)
+    kp = max(128, -(-k // 128) * 128)
+    mp = -(-d // block_m) * block_m
+    cp = -(-d // block_k) * block_k
+    a_p = jnp.pad(a, ((0, mp - d), (0, cp - d))) if (mp, cp) != (d, d) else a
+    w_p = jnp.pad(w, ((0, cp - d), (0, kp - k)))
+    out = pl.pallas_call(
+        _power_kernel,
+        grid=(mp // block_m, cp // block_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, s: (i, s)),
+            pl.BlockSpec((block_k, kp), lambda i, s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, kp), lambda i, s: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, kp), jnp.float32),
+        interpret=interpret,
+    )(a_p, w_p)
+    return out[:d, :k]

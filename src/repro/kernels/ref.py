@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(x: jax.Array) -> jax.Array:
+    """x (n, d) -> x.T @ x in fp32."""
+    x32 = x.astype(jnp.float32)
+    return x32.T @ x32
+
+
+def power_matmul_ref(a: jax.Array, w: jax.Array) -> jax.Array:
+    """(d, d) @ (d, k) in fp32."""
+    return a.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """Per-head exact softmax attention. q (Sq, hd), k/v (Skv, hd)."""
+    sq, hd = q.shape
+    skv = k.shape[0]
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), dtype=bool), k=skv - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True) -> jax.Array:
+    """Batched multi-head oracle. q (B, H, S, hd), k/v (B, Hkv, S, hd)."""
+    b, h, sq, hd = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    f = lambda q1, k1, v1: attention_ref(q1, k1, v1, causal=causal)
+    return jax.vmap(jax.vmap(f))(q, k, v)

@@ -1,0 +1,408 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any jax import — jax locks the
+# device count at first backend init.  Do not move or reorder.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we
+  1. build the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. jit the train/prefill/decode step with full 2-D param shardings,
+  3. ``.lower(**input_specs).compile()`` — proving the distribution config
+     is coherent (no sharding mismatch / unsupported collective),
+  4. record memory_analysis / cost_analysis / per-collective bytes and the
+     three roofline terms into a JSON blob for EXPERIMENTS.md.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh single,multi --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_spec, cache_shardings,
+                                   params_shardings)
+from repro.launch.specs import input_specs, text_len
+from repro.launch.steps import make_decode_step, make_prefill_step, \
+    make_train_step
+from repro.models import init_params, init_cache
+from repro.models.config import SHAPES, ArchConfig, ShapeSpec
+from repro.optim import AdamW
+from repro.roofline.analysis import from_compiled
+from repro.models import model as model_mod
+
+
+SERVE_SHARDING = "2dtp"     # "2dtp" | "fsdp" (baseline) — §Perf knob
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _batch_shardings(mesh, specs: Dict, global_batch: int):
+    bs = batch_spec(mesh, global_batch)
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        return NamedSharding(mesh, P(*(tuple(bs) + (None,) * (nd - len(bs)))))
+    return jax.tree.map(one, specs)
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+               compress: bool = False, donate: bool = True,
+               remat: str = "full"):
+    """Returns (lowered, compiled, aux_info)."""
+    from repro.launch.mesh import dp_axes
+    from repro.models import partitioning
+    model_mod.REMAT_POLICY = remat
+    dp = dp_axes(mesh)
+    if shape.global_batch % int(np.prod([mesh.shape[a] for a in dp])):
+        dp = tuple(a for a in dp if a == "data"
+                   and shape.global_batch % mesh.shape[a] == 0)
+    partitioning.set_mesh(mesh, dp=dp, tp="model")
+    chips = int(np.prod(list(mesh.shape.values())))
+    specs = input_specs(cfg, shape)
+    # training keeps fp32 master params (optimizer); serving loads bf16
+    pdtype = jnp.float32 if shape.kind == "train" else jnp.bfloat16
+    pshape = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), pdtype))
+    # decode: weight-stationary 2-D TP (no per-token FSDP weight gathers)
+    psh = params_shardings(
+        mesh, pshape,
+        mode=("serve" if shape.kind == "decode"
+              and SERVE_SHARDING == "2dtp" else "train"))
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-4)
+        oshape = jax.eval_shape(lambda: opt.init(pshape))
+        osh = jax.tree.map(
+            lambda l: NamedSharding(mesh, P()) if l.ndim == 0 else None,
+            oshape)
+        # moments mirror param shardings
+        osh = type(oshape)(step=NamedSharding(mesh, P()),
+                           mu=psh, nu=psh)
+        bsh = _batch_shardings(mesh, specs["batch"], shape.global_batch)
+        step = make_train_step(cfg, opt)
+        jitted = jax.jit(step,
+                         in_shardings=(psh, osh, bsh),
+                         out_shardings=(psh, osh, _rep(mesh)),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(pshape, oshape, specs["batch"])
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, max_seq=shape.seq_len)
+        cshape = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        csh = cache_shardings(mesh, cshape, shape.global_batch, shape.seq_len)
+        bs = batch_spec(mesh, shape.global_batch)
+        b_axes = bs[0] if len(bs) else None
+        tok_sh = NamedSharding(mesh, P(b_axes, None))
+        args = [specs["tokens"]]
+        in_sh = [tok_sh]
+        if "embeds" in specs:
+            args.append(specs["embeds"])
+            in_sh.append(NamedSharding(mesh, P(b_axes, None, None)))
+        logits_sh = NamedSharding(mesh, P(b_axes, "model"))
+        jitted = jax.jit(lambda p, *a: step(p, *a),
+                         in_shardings=(psh, *in_sh),
+                         out_shardings=(logits_sh, csh))
+        lowered = jitted.lower(pshape, *args)
+    else:  # decode
+        step = make_decode_step(cfg)
+        cshape = specs["cache"]
+        csh = cache_shardings(mesh, cshape, shape.global_batch, shape.seq_len)
+        bs = batch_spec(mesh, shape.global_batch)
+        b_axes = bs[0] if len(bs) else None
+        tok_sh = NamedSharding(mesh, P(b_axes, None))
+        logits_sh = NamedSharding(mesh, P(b_axes, "model"))
+        jitted = jax.jit(step,
+                         in_shardings=(psh, csh, tok_sh),
+                         out_shardings=(logits_sh, csh),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(pshape, cshape, specs["token"])
+
+    compiled = lowered.compile()
+    partitioning.set_mesh(None)
+    return lowered, compiled
+
+
+def _probe_cfg(cfg: ArchConfig, n_groups: int) -> ArchConfig:
+    import dataclasses
+    layers = n_groups * len(cfg.pattern) + (1 if cfg.first_dense_ff else 0)
+    kw = {"n_layers": layers}
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = n_groups
+    return dataclasses.replace(cfg, **kw)
+
+
+def probe_costs(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+                remat: str = "full"):
+    """Depth-extrapolated cost accounting.
+
+    XLA's HloCostAnalysis counts while-loop bodies exactly once, so FLOPs /
+    bytes / collective bytes of the scanned layer stack are invisible in the
+    full compile.  We therefore compile two *unrolled* probes (1 and 2
+    pattern groups, monolithic-einsum attention) and extrapolate linearly:
+
+        total(G) = probe(1) + (G - 1) * (probe(2) - probe(1))
+
+    which is exact because cost is affine in depth (embedding/head/optimizer
+    constants land in probe(1); each extra group adds the identical delta).
+    """
+    from repro.models import attention as attn_mod
+    model_mod.UNROLL_GROUPS = True
+    attn_mod.PROBE_EINSUM = True
+    try:
+        out = []
+        for g in (1, 2):
+            pcfg = _probe_cfg(cfg, g)
+            _, compiled = lower_cell(pcfg, shape, mesh, remat=remat)
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            from repro.roofline.analysis import collective_bytes, fused_bytes
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            out.append({"flops": float(cost.get("flops", 0.0)),
+                        "bytes": float(cost.get("bytes accessed", 0.0)),
+                        "fused": float(fused_bytes(hlo)),
+                        "coll": coll})
+        g_full = cfg.n_groups
+        f1, f2 = out
+        lin = lambda a, b: a + (g_full - 1) * (b - a)
+        extrap = {
+            "flops": lin(f1["flops"], f2["flops"]),
+            "bytes": lin(f1["bytes"], f2["bytes"]),
+            "fused": lin(f1["fused"], f2["fused"]),
+            "coll": {k: lin(f1["coll"][k], f2["coll"][k])
+                     for k in f1["coll"]},
+        }
+        return extrap, out
+    finally:
+        model_mod.UNROLL_GROUPS = False
+        attn_mod.PROBE_EINSUM = False
+
+
+def model_flops_global(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    n_active = cfg.param_count(active_only=True)
+    toks = shape.global_batch * text_len(cfg, shape)
+    if shape.kind == "train":
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        return 2.0 * n_active * toks
+    return 2.0 * n_active * shape.global_batch     # decode: 1 new token
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             remat: str = "full") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        rec = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped",
+               "reason": "full-attention arch; O(S^2) at 524k documented "
+                         "in DESIGN.md §Arch-applicability"}
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                    out_dir, f"{arch}__{shape_name}__{mesh_kind}.json"),
+                    "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        with jax.default_device(jax.devices("cpu")[0]):
+            lowered, compiled = lower_cell(cfg, shape, mesh, remat=remat)
+            extrap, probes = probe_costs(cfg, shape, mesh, remat=remat)
+        rf = from_compiled(cfg.name, shape_name, mesh_kind, chips, compiled,
+                           model_flops_global(cfg, shape))
+        # replace scan-blind counts with the depth-extrapolated ones
+        rf.hlo_flops_per_chip = extrap["flops"]
+        rf.hlo_bytes_per_chip = extrap["bytes"]
+        rf.fused_bytes_per_chip = extrap["fused"]
+        rf.collective_bytes_per_chip = float(extrap["coll"]["total"])
+        rf.collective_breakdown = {k: int(v) for k, v in
+                                   extrap["coll"].items()}
+        ma = compiled.memory_analysis()
+        rec = rf.to_dict()
+        rec.update(status="ok", compile_s=time.time() - t0,
+                   temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+                   arg_bytes=getattr(ma, "argument_size_in_bytes", None),
+                   out_bytes=getattr(ma, "output_size_in_bytes", None),
+                   gen_code_bytes=getattr(ma, "generated_code_size_in_bytes",
+                                          None))
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        rec = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_kind,
+               "status": "error", "compile_s": time.time() - t0,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_kind}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_compressed_cell(arch: str, mesh_kind: str, out_dir: str, *,
+                        rank: int = 32, K: int = 4) -> Dict[str, Any]:
+    """Paper-representative cell: decentralized DP training where gradient
+    averaging is DeEPCA-compressed ring gossip (no all-reduce).  The mesh is
+    the same 256/512 chips laid out as one 'agents' ring (physical nearest-
+    neighbour ICI on the torus)."""
+    import dataclasses
+    from repro.core.topology import ring
+    from repro.launch.steps import make_train_step_compressed
+    from repro.models import attention as attn_mod
+
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    m = 512 if mesh_kind == "multi" else 256
+    if shape.global_batch % m:
+        # weak scaling: one sequence per agent minimum
+        shape = dataclasses.replace(shape, global_batch=m)
+    mesh = jax.make_mesh((m,), ("agents",))
+    topo = ring(m)
+    opt = AdamW(lr=1e-4)
+
+    def lower_one(pcfg):
+        step, init_cs = make_train_step_compressed(
+            pcfg, opt, mesh, topo, rank=rank, K=K)
+        pshape = jax.eval_shape(
+            lambda: init_params(pcfg, jax.random.PRNGKey(0), jnp.float32))
+        oshape = jax.eval_shape(lambda: opt.init(pshape))
+        cshape = jax.eval_shape(lambda: init_cs(pshape))
+        batch = {"tokens": jax.ShapeDtypeStruct(
+                     (shape.global_batch, shape.seq_len), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct(
+                     (shape.global_batch, shape.seq_len), jnp.int32)}
+        jitted = jax.jit(step, donate_argnums=(0, 1, 2))
+        return jitted.lower(pshape, oshape, cshape, batch).compile()
+
+    t0 = time.time()
+    try:
+        compiled = lower_one(cfg)
+        # unrolled probes for scan-blind cost accounting
+        from repro.roofline.analysis import collective_bytes, fused_bytes
+        model_mod.UNROLL_GROUPS = True
+        attn_mod.PROBE_EINSUM = True
+        try:
+            probes = []
+            for g in (1, 2):
+                c = lower_one(_probe_cfg(cfg, g))
+                cost = c.cost_analysis()
+                cost = cost[0] if isinstance(cost, list) else cost
+                hlo = c.as_text()
+                probes.append({"flops": float(cost.get("flops", 0)),
+                               "bytes": float(cost.get("bytes accessed", 0)),
+                               "fused": float(fused_bytes(hlo)),
+                               "coll": collective_bytes(hlo)})
+        finally:
+            model_mod.UNROLL_GROUPS = False
+            attn_mod.PROBE_EINSUM = False
+        g_full = cfg.n_groups
+        lin = lambda a, b: a + (g_full - 1) * (b - a)
+        f1, f2 = probes
+        rf = from_compiled(cfg.name + "+deepca_dp", "train_4k", mesh_kind, m,
+                           compiled, model_flops_global(cfg, shape))
+        rf.hlo_flops_per_chip = lin(f1["flops"], f2["flops"])
+        rf.hlo_bytes_per_chip = lin(f1["bytes"], f2["bytes"])
+        rf.fused_bytes_per_chip = lin(f1["fused"], f2["fused"])
+        rf.collective_bytes_per_chip = lin(
+            f1["coll"]["total"], f2["coll"]["total"])
+        rf.collective_breakdown = {k: int(lin(f1["coll"][k], f2["coll"][k]))
+                                   for k in f1["coll"]}
+        ma = compiled.memory_analysis()
+        rec = rf.to_dict()
+        rec.update(status="ok", compile_s=time.time() - t0,
+                   temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+                   rank=rank, K=K, topology=topo.name)
+    except Exception as e:  # noqa: BLE001
+        rec = {"arch": arch + "+deepca_dp", "shape": "train_4k",
+               "mesh": mesh_kind, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(
+                out_dir, f"{arch}_deepca_dp__train_4k__{mesh_kind}.json"),
+                "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--moe", default="shard", choices=["shard", "ref"])
+    ap.add_argument("--cast-once", type=int, default=1)
+    ap.add_argument("--decode-attn", default="grouped",
+                    choices=["grouped", "repeat"])
+    ap.add_argument("--serve-sharding", default="2dtp",
+                    choices=["2dtp", "fsdp"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.models import attention as attn_mod
+    from repro.models import moe as moe_mod
+    moe_mod.FORCE_REFERENCE = (args.moe == "ref")
+    model_mod.CAST_PARAMS_ONCE = bool(args.cast_once)
+    attn_mod.DECODE_GROUPED = (args.decode_attn == "grouped")
+    global SERVE_SHARDING
+    SERVE_SHARDING = args.serve_sharding
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+
+    if args.arch.endswith("+deepca_dp"):
+        base = args.arch[:-len("+deepca_dp")]
+        for mesh_kind in meshes:
+            rec = run_compressed_cell(base, mesh_kind, args.out)
+            print(f"[{rec['status']}] {rec['arch']} train_4k {mesh_kind}"
+                  + (f" step={rec.get('step_time_s', 0):.4f}s"
+                     f" coll={rec.get('collective_s', 0):.4f}s"
+                     if rec["status"] == "ok" else " " + rec["error"][:200]),
+                  flush=True)
+        return
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                fname = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_kind}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    print(f"[skip] {arch} {shape} {mesh_kind}", flush=True)
+                    continue
+                rec = run_cell(arch, shape, mesh_kind, args.out,
+                               remat=args.remat)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" bottleneck={rec['bottleneck']}"
+                             f" step={rec['step_time_s']:.4f}s"
+                             f" mfu={rec['mfu']:.3f}")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"[{status}] {arch} {shape} {mesh_kind}"
+                      f" ({rec.get('compile_s', 0):.1f}s){extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A function, not a module constant, so importing never touches jax device
+state (the dry-run must set XLA_FLAGS before first backend init).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes used for data parallelism (batch sharding)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_host_mesh(n: int | None = None, axis: str = "data"):
+    """Small mesh over whatever local devices exist (tests/examples)."""
+    devs = np.array(jax.devices())
+    n = n or len(devs)
+    return jax.sharding.Mesh(devs[:n].reshape(n), (axis,))

@@ -1,0 +1,187 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+2-D sharding everywhere: FSDP over the data axis (+pod) and TP/EP over the
+model axis — params P("data","model"), experts P("model","data",...) (EP),
+embeddings P("model","data") (vocab-sharded).  Optimizer moments inherit the
+parameter specs (ZeRO-3).  KV caches shard sequence over "model" (and over
+"data" too for the batch-1 long-context cell) so decode lowers to
+flash-decoding collectives.
+
+Rules are (regex, spec-builder) pairs applied to tree paths — the same
+mechanism MaxText/T5X use.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# parameter rules: matched against "/"-joined tree paths (first match wins).
+# `d` = FSDP axis ("data"), `m` = tensor/expert axis ("model").
+# Stacked scan params get the leading n_groups axis auto-prepended (None).
+# ---------------------------------------------------------------------------
+_PARAM_RULES = [
+    (r"embed$",                        lambda d, m: P(m, d)),
+    (r"lm_head$",                      lambda d, m: P(d, m)),
+    (r"final_norm$|norm",              lambda d, m: P()),
+    # attention
+    (r"(wq|wk|wv)$",                   lambda d, m: P(d, m)),
+    (r"wo$",                           lambda d, m: P(m, d)),
+    (r"(bq|bk|bv)$",                   lambda d, m: P(m)),
+    # MLA
+    (r"q_down$|kv_down$",              lambda d, m: P(d, m)),
+    (r"q_up$|kv_up$",                  lambda d, m: P(d, m)),
+    # MoE (leading expert axis -> EP over model)
+    (r"router$",                       lambda d, m: P(d, m)),
+    (r"ffn/(wi_gate|wi_up)$",          lambda d, m: P(d, m)),
+    (r"ffn/wo$",                       lambda d, m: P(m, d)),
+    (r"shared/(wi_gate|wi_up)$",       lambda d, m: P(d, m)),
+    (r"shared/wo$",                    lambda d, m: P(m, d)),
+    # SSD / xLSTM
+    (r"(wz|wx)$",                      lambda d, m: P(d, m)),
+    (r"(wB|wC|wdt)$",                  lambda d, m: P(d, None)),
+    (r"conv$",                         lambda d, m: P(None, m)),
+    (r"(A_log|D|dt_bias|b)$",          lambda d, m: P()),
+    (r"wh$",                           lambda d, m: P(d, m)),
+]
+
+_MOE_3D = re.compile(r"ffn/(wi_gate|wi_up|wo)$")
+
+
+def _path_of(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"#{p.idx}")
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path_str: str, ndim: int, *, d="data", m="model") -> P:
+    """Spec for one parameter leaf (path already "/"-joined)."""
+    # MoE expert stacks are (E, in, out) = ndim 3 unstacked / 4 group-stacked;
+    # dense FFN weights reuse the same key names but are one dim smaller.
+    base: Optional[P] = None
+    if (_MOE_3D.search(path_str) and "shared" not in path_str
+            and ndim >= 4):
+        if path_str.endswith("wo"):
+            base = P(m, None, d)
+        else:
+            base = P(m, d, None)
+    else:
+        for pat, fn in _PARAM_RULES:
+            if re.search(pat, path_str):
+                base = fn(d, m)
+                break
+    if base is None:
+        base = P()
+    # prepend None for stacked group axes
+    pad = ndim - len(base)
+    if pad > 0:
+        base = P(*(((None,) * pad) + tuple(base)))
+    elif pad < 0:   # rule longer than leaf ndim (e.g. biases) -> replicate
+        base = P(*tuple(base)[-ndim:]) if ndim else P()
+    return base
+
+
+def params_shardings(mesh: Mesh, params_shape: PyTree, *, d="data",
+                     m="model", mode: str = "train") -> PyTree:
+    """mode="train": FSDP(d) x TP(m).  mode="serve": weight-stationary 2-D
+    TP — every weight dim that divides is sharded over (d, m) jointly so
+    decode never all-gathers parameters (weights stay resident; only small
+    activation collectives cross the mesh).  Falls back per-leaf to the
+    train spec when shapes don't divide."""
+    dm = int(np.prod([mesh.shape[a] for a in (d,) if a in mesh.shape])) \
+        * mesh.shape[m]
+    dsz = mesh.shape.get(d, 1) if hasattr(mesh.shape, "get") else \
+        dict(mesh.shape)[d]
+
+    def one(path, leaf):
+        spec = param_spec(_path_of(path), len(leaf.shape), d=d, m=m)
+        if mode == "serve":
+            spec = _serve_spec(spec, tuple(leaf.shape), mesh, d, m)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def _serve_spec(train_spec: P, shape, mesh: Mesh, d: str, m: str) -> P:
+    """Rewrite an FSDP(d)xTP(m) spec into joint (d,m) sharding of the dim
+    that was TP-sharded, dropping the FSDP axis from the contraction dim."""
+    dsz = dict(mesh.shape)[d]
+    msz = dict(mesh.shape)[m]
+    if len(shape) >= 4:          # stacked MoE expert tensors: keep EP x FSDP
+        return train_spec
+    out = []
+    for i, ax in enumerate(tuple(train_spec) + (None,) * (len(shape)
+                                                          - len(train_spec))):
+        if ax == m and shape[i] % (dsz * msz) == 0:
+            out.append((d, m))
+        elif ax == m:
+            out.append(m if shape[i] % msz == 0 else None)
+        elif ax == d:
+            out.append(None)          # no FSDP on the contraction dim
+        elif isinstance(ax, tuple):
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ------------------------------------------------------------- activations
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    """Batch axis over all dp axes when divisible, else best effort."""
+    dp = [a for a in mesh.axis_names if a in ("pod", "data")]
+    n = int(np.prod([mesh.shape[a] for a in dp]))
+    if global_batch % n == 0:
+        return P(tuple(dp))
+    if global_batch % mesh.shape.get("data", 1) == 0:
+        return P("data")
+    return P()
+
+
+def cache_shardings(mesh: Mesh, cache_shape: PyTree, global_batch: int,
+                    max_seq: int) -> PyTree:
+    """KV/state caches: batch over dp axes; long sequence axes over "model"
+    (plus "data"/"pod" too when the batch is too small to use them — the
+    batch-1 long-context cell)."""
+    bspec = batch_spec(mesh, global_batch)
+    batch_axes = bspec[0] if len(bspec) and bspec[0] else ()
+    if isinstance(batch_axes, str):
+        batch_axes = (batch_axes,)
+    seq_axes = tuple(a for a in mesh.axis_names if a not in batch_axes)
+    # keep "pod" out of seq sharding unless batch doesn't use data either
+    if "model" in seq_axes and len(seq_axes) > 1 and max_seq % int(
+            np.prod([mesh.shape[a] for a in seq_axes])) != 0:
+        seq_axes = ("model",)
+    seq_spec = seq_axes if len(seq_axes) > 1 else (seq_axes[0]
+                                                   if seq_axes else None)
+
+    def one(path, leaf):
+        p = _path_of(path)
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        spec = [None] * nd
+        # locate axes by size (robust to the optional stacked group axis)
+        for i, s in enumerate(shape):
+            if s == global_batch and spec[i] is None and "pos" not in p:
+                spec[i] = bspec[0] if len(bspec) else None
+                break
+        if re.search(r"/(k|v|ckv|k_pe)$", p):
+            for i in range(nd - 1, -1, -1):
+                if shape[i] == max_seq:
+                    spec[i] = seq_spec
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

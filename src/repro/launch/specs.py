@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input / state (no allocation).
+
+``input_specs(cfg, shape)`` returns the kwargs for the step being lowered:
+  train   -> {"batch": {tokens, labels[, embeds]}}
+  prefill -> {"tokens"[, "embeds"]}
+  decode  -> {"cache": <full cache specs>, "token": (B, 1)}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache
+from repro.models.config import ArchConfig, ShapeSpec
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _embeds_spec(cfg: ArchConfig, batch: int):
+    if cfg.n_patches:
+        return SDS((batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        return SDS((batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def text_len(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    """VLM cells: the patch stub occupies the front of the sequence."""
+    return shape.seq_len - (cfg.n_patches or 0)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b = shape.global_batch
+    s = text_len(cfg, shape)
+    emb = _embeds_spec(cfg, b)
+    if shape.kind == "train":
+        batch = {"tokens": SDS((b, s), jnp.int32),
+                 "labels": SDS((b, s), jnp.int32)}
+        if emb is not None:
+            batch["embeds"] = emb
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((b, s), jnp.int32)}
+        if emb is not None:
+            out["embeds"] = emb
+        return out
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: init_cache(cfg, b, shape.seq_len, jnp.bfloat16))
+        return {"cache": cache, "token": SDS((b, 1), jnp.int32)}
+    raise ValueError(shape.kind)

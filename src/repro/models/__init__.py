@@ -1,0 +1,4 @@
+"""Model zoo: composable pure-JAX blocks for the 10 assigned architectures."""
+from .config import ArchConfig, BlockSpec, ShapeSpec, SHAPES, model_flops_per_token
+from .model import (init_params, init_cache, forward, loss_fn, prefill,
+                    decode_step, make_positions)

@@ -1,0 +1,334 @@
+"""Attention mixers: GQA (causal / bidirectional / cross) and DeepSeek MLA.
+
+Three score paths:
+* ``einsum``  — exact masked softmax, used for short sequences (smoke tests).
+* ``chunked`` — pure-jnp double-chunked online softmax ("flash" semantics,
+  O(chunk^2) live memory) for 32k+ contexts; this is the distributed dry-run
+  path (plain einsums partition cleanly under GSPMD).
+* the Pallas kernel in :mod:`repro.kernels.flash_attention` is the
+  single-device TPU fast path (validated against ``ref.py``; not used in the
+  512-way lowering because pallas_call needs custom_partitioning to compose
+  with GSPMD).
+
+Decode attends a (B, Hkv, S_max, hd) cache updated via dynamic_update_slice;
+with the cache sequence axis sharded over the "model" mesh axis, XLA emits
+the flash-decoding pattern (partial softmax + AllReduce combine).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, apply_rope, dense_init, rms_norm, truncated_normal
+from .partitioning import BATCH, HEADS, SEQ, constrain
+
+_NEG = -1e30
+_CHUNK_THRESHOLD = 4096     # use chunked path at/above this many kv positions
+_Q_CHUNK = 1024
+_KV_CHUNK = 1024
+# Cost-probe mode: force the monolithic einsum path (no inner kv scan) so
+# HloCostAnalysis sees every attention FLOP (see model.UNROLL_GROUPS).
+PROBE_EINSUM = False
+# Perf knob: decode attention as grouped 5-D einsum (True) vs jnp.repeat
+# kv-head broadcast (False).  Measured (§Perf qwen decode): with 2-D-TP
+# serving shardings the repeat path is FASTER (1.37s vs 1.54s roofline) —
+# the grouped form triggers per-layer fp32 cache all-to-alls.  Hypothesis
+# refuted; default stays False.
+DECODE_GROUPED = False
+
+
+# ---------------------------------------------------------------- init
+def attn_init(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, h * hd, dtype),
+         "wk": dense_init(ks[1], d, hkv * hd, dtype),
+         "wv": dense_init(ks[2], d, hkv * hd, dtype),
+         "wo": dense_init(ks[3], h * hd, d, dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def mla_init(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "q_down": dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), dtype),
+        "q_up": dense_init(ks[1], cfg.q_lora_rank, h * qk, dtype),
+        "kv_down": dense_init(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim,
+                              dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        "kv_up": dense_init(ks[3], cfg.kv_lora_rank,
+                            h * (cfg.qk_nope_dim + cfg.v_head_dim), dtype),
+        "wo": dense_init(ks[4], h * cfg.v_head_dim, d, dtype),
+    }
+
+
+# ----------------------------------------------------- score computation
+def _einsum_attention(q, k, v, causal: bool, q_offset: int = 0) -> jax.Array:
+    """q: (B,H,Sq,hd), k/v: (B,H,Skv,hd) (kv heads already broadcast)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / (hd ** 0.5)
+    if causal:
+        sq, skv = q.shape[2], k.shape[2]
+        rows = q_offset + jnp.arange(sq)[:, None]
+        cols = jnp.arange(skv)[None, :]
+        s = jnp.where(rows >= cols, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def _chunked_attention(q, k, v, causal: bool) -> jax.Array:
+    """Online-softmax double-chunked attention in pure jnp (flash semantics).
+
+    Live memory is O(B*H*q_chunk*kv_chunk) scores instead of O(S^2).
+    """
+    b, h, sq, hd = q.shape
+    hdv = v.shape[-1]            # MLA: value head dim != qk head dim
+    skv = k.shape[2]
+    qc = min(_Q_CHUNK, sq)
+    kc = min(_KV_CHUNK, skv)
+    assert sq % qc == 0 and skv % kc == 0, (sq, skv, qc, kc)
+    nq, nk = sq // qc, skv // kc
+    scale = hd ** -0.5
+
+    cst5 = lambda t: constrain(t, None, BATCH, HEADS, None, None)
+    q_r = cst5(q.reshape(b, h, nq, qc, hd).transpose(2, 0, 1, 3, 4))
+    k_r = cst5(k.reshape(b, h, nk, kc, hd).transpose(2, 0, 1, 3, 4))
+    v_r = cst5(v.reshape(b, h, nk, kc, hdv).transpose(2, 0, 1, 3, 4))
+
+    def q_block(qi, q_blk):
+        def kv_step(carry, inputs):
+            m_prev, l_prev, acc = carry
+            ki, k_blk, v_blk = inputs
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk
+                           ).astype(jnp.float32) * scale
+            s = constrain(s, BATCH, HEADS, None, None)
+            if causal:
+                rows = qi * qc + jnp.arange(qc)[:, None]
+                cols = ki * kc + jnp.arange(kc)[None, :]
+                s = jnp.where(rows >= cols, s, _NEG)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new)
+            l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd",
+                                           p.astype(q.dtype), v_blk
+                                           ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, qc, 1), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, h, qc, 1), jnp.float32)
+        a0 = jnp.zeros((b, h, qc, hdv), jnp.float32)
+        # remat the inner step: backward recomputes the (qc, kc) score block
+        # instead of saving it — this is what makes the chunked path "flash"
+        # for training, not just for inference.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (jnp.arange(nk), k_r, v_r))
+        return (acc / jnp.where(l == 0, 1.0, l)).astype(q.dtype)
+
+    out = jax.lax.map(lambda args: q_block(*args),
+                      (jnp.arange(nq), q_r))                 # (nq,B,H,qc,hdv)
+    out = cst5(out)
+    return constrain(out.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, hdv),
+                     BATCH, HEADS, None, None)
+
+
+def sdpa(q, k, v, *, causal: bool, q_offset: int = 0) -> jax.Array:
+    """Dispatch between exact einsum and chunked flash paths."""
+    if PROBE_EINSUM:
+        return _einsum_attention(q, k, v, causal, q_offset)
+    if k.shape[2] >= _CHUNK_THRESHOLD and q.shape[2] > 1 and q_offset == 0 \
+            and q.shape[2] % min(_Q_CHUNK, q.shape[2]) == 0 \
+            and k.shape[2] % min(_KV_CHUNK, k.shape[2]) == 0:
+        return _chunked_attention(q, k, v, causal)
+    return _einsum_attention(q, k, v, causal, q_offset)
+
+
+def _broadcast_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, Hkv, S, hd) -> (B, H, S, hd) by repeating head groups."""
+    hkv = k.shape[1]
+    if hkv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hkv, axis=1)
+
+
+# -------------------------------------------------------------- GQA forward
+def attn_forward(cfg: ArchConfig, p: Params, x: jax.Array, *,
+                 positions: jax.Array, causal: bool = True,
+                 cache: Optional[Params] = None,
+                 kv_source: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Optional[Params]]:
+    """GQA self/cross attention.
+
+    x: (B, S, d).  cache: {"k","v": (B, Hkv, S_max, hd), "pos": int32} for
+    decode (S == 1).  kv_source: encoder output for cross-attention.
+    """
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    src = x if kv_source is None else kv_source
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, src.shape[1], hkv, hd)
+    v = v.reshape(b, src.shape[1], hkv, hd)
+    if cache is not None and s == 1:
+        # decode: fix shardings BEFORE rope — the rotation slices head_dim,
+        # and a head_dim carried over from 2-D-TP column sharding would
+        # force SPMD replication fallbacks (observed on qwen decode, §Perf).
+        q = constrain(q, BATCH, None, HEADS, None)
+        k = constrain(k, BATCH, None, None, None)
+        v = constrain(v, BATCH, None, None, None)
+
+    if cfg.rope_theta > 0 and kv_source is None:
+        kv_pos = positions
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, kv_pos, cfg.rope_theta, cfg.mrope_sections)
+
+    q = constrain(q.transpose(0, 2, 1, 3), BATCH, HEADS, None, None)
+    k = constrain(k.transpose(0, 2, 1, 3), BATCH, HEADS, None, None)
+    v = constrain(v.transpose(0, 2, 1, 3), BATCH, HEADS, None, None)
+
+    new_cache = None
+    if cache is not None and kv_source is None:
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, pos, 0))
+        new_cache = {"k": ck, "v": cv}
+        if s == 1:
+            # decode: attend the full (possibly seq-sharded) cache
+            out = _decode_attention(q, ck, cv, pos)
+        else:
+            # prefill: attention over the freshly computed K/V (cache is
+            # written for subsequent decode steps, assumed pos == 0)
+            out = sdpa(q, _broadcast_kv(k, h), _broadcast_kv(v, h),
+                       causal=causal)
+    else:
+        out = sdpa(q, _broadcast_kv(k, h), _broadcast_kv(v, h), causal=causal)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd).astype(dt)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt)), new_cache
+
+
+def _decode_attention(q, k, v, pos) -> jax.Array:
+    """Single-token decode over a seq-sharded cache (flash-decoding).
+
+    q: (B, H, 1, hd); k/v: (B, Hkv, S_max, hd) with S_max sharded over the
+    "model" axis.  GQA head groups are expressed as a 5-D einsum instead of
+    a ``jnp.repeat`` — the repeat used to push GSPMD into resharding the
+    whole cache onto kv-heads (a full-sequence all-gather per layer, §Perf
+    qwen decode iteration).  With the grouped form + SEQ constraints the
+    softmax reduction partitions into per-shard partials + one AllReduce.
+    """
+    b, h, _, hd = q.shape
+    hkv, s_max = k.shape[1], k.shape[2]
+    if not DECODE_GROUPED:   # baseline path (kv-head materializing repeat)
+        k = _broadcast_kv(k, h)
+        v = _broadcast_kv(v, h)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) \
+            * (hd ** -0.5)
+        valid = jnp.arange(s_max)[None, None, None, :] <= pos
+        s = jnp.where(valid, s, _NEG)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    g = h // hkv
+    q5 = q.reshape(b, hkv, g, 1, hd)
+    # fp32 scores via preferred_element_type: the cache operand stays bf16
+    # (an .astype(f32) here made XLA convert + reshard the WHOLE cache in
+    # fp32 per layer — 2x the a2a bytes; §Perf qwen decode iteration 3).
+    s = jnp.einsum("bkgqd,bksd->bkgqs", q5.astype(k.dtype), k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = jnp.arange(s_max)[None, None, None, None, :] <= pos
+    s = jnp.where(valid, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v)
+    return out.reshape(b, h, 1, hd)
+
+
+# -------------------------------------------------------------- MLA forward
+def mla_forward(cfg: ArchConfig, p: Params, x: jax.Array, *,
+                positions: jax.Array,
+                cache: Optional[Params] = None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """DeepSeek-V2 multi-head latent attention.
+
+    Prefill/train: expanded form.  Decode: *absorbed* form — scores are taken
+    directly against the compressed (B, S, kv_lora + rope) cache, which is
+    the entire point of MLA (cache is ~(kv_lora+rope) wide, not 2*H*hd).
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    r, nope, rope_d, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim,
+                           cfg.qk_rope_dim, cfg.v_head_dim)
+    dt = x.dtype
+    scale = (nope + rope_d) ** -0.5
+
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["q_down"].astype(dt)),
+                  p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", cq, p["q_up"].astype(dt))
+    q = constrain(q.reshape(b, s, h, nope + rope_d),
+                  BATCH, None, HEADS, None)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["kv_down"].astype(dt))
+    ckv, k_pe = ckv_full[..., :r], ckv_full[..., r:]
+    ckv = rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    kv_up = p["kv_up"].astype(dt).reshape(r, h, nope + vd)
+    w_uk, w_uv = kv_up[..., :nope], kv_up[..., nope:]    # (r, h, nope/vd)
+
+    new_cache = None
+    if cache is not None:
+        pos = cache["pos"]
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+        cp = jax.lax.dynamic_update_slice(
+            cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, pos, 0))
+        new_cache = {"ckv": cc, "k_pe": cp}
+    if cache is not None and s == 1:
+        # absorbed decode: q_lat = q_nope @ w_uk  -> (B, 1, H, r)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+        sc = (jnp.einsum("bshr,bkr->bhsk", q_lat, cc)
+              + jnp.einsum("bshp,bkp->bhsk", q_pe, cp)
+              ).astype(jnp.float32) * scale
+        valid = jnp.arange(cc.shape[1])[None, None, None, :] <= pos
+        sc = jnp.where(valid, sc, _NEG)
+        pr = jax.nn.softmax(sc, axis=-1).astype(dt)
+        o_lat = jnp.einsum("bhsk,bkr->bshr", pr, cc)     # (B,1,H,r)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv)  # (B,1,H,vd)
+    else:
+        kv = constrain(jnp.einsum("bsr,rhn->bshn", ckv, kv_up),
+                       BATCH, None, HEADS, None)
+        k_nope, vv = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, rope_d))],
+            axis=-1)
+        qq = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = sdpa(qq.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                   vv.transpose(0, 2, 1, 3), causal=True
+                   ).transpose(0, 2, 1, 3)
+
+    out = out.reshape(b, s, h * vd).astype(dt)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt)), new_cache

@@ -1,0 +1,124 @@
+"""Residual block assembly: (pre-norm mixer) [+ cross-attn] (+ pre-norm FFN).
+
+Each block kind is homogeneous within a pattern position so the model can
+`lax.scan` over stacked per-group parameters.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_forward, attn_init, mla_forward, mla_init
+from .config import ArchConfig, BlockSpec
+from .layers import Params, ffn_forward, ffn_init, rms_norm
+from .moe import moe_forward, moe_init
+from .ssm import (slstm_cache_init, slstm_forward, slstm_init, ssd_cache_init,
+                  ssd_forward, ssd_init)
+
+
+def block_init(cfg: ArchConfig, spec: BlockSpec, key, *,
+               layer_idx: int = 1, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"norm1": jnp.zeros((d,), dtype)}
+    if spec.mixer in ("attn", "attn_bidir"):
+        p["mixer"] = attn_init(cfg, ks[0], dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = mla_init(cfg, ks[0], dtype)
+    elif spec.mixer in ("mamba", "mlstm"):
+        p["mixer"] = ssd_init(cfg, ks[0], spec.mixer, dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = slstm_init(cfg, ks[0], dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross:
+        p["cross"] = attn_init(cfg, ks[1], dtype)
+        p["norm_cross"] = jnp.zeros((d,), dtype)
+    if spec.ffn != "none":
+        p["norm2"] = jnp.zeros((d,), dtype)
+        if spec.ffn == "dense":
+            ff = cfg.first_dense_ff if (cfg.first_dense_ff and layer_idx == 0) \
+                else cfg.d_ff
+            p["ffn"] = ffn_init(ks[2], d, ff, dtype)
+        elif spec.ffn == "moe":
+            p["ffn"] = moe_init(cfg, ks[2], dtype)
+        else:
+            raise ValueError(spec.ffn)
+    return p
+
+
+def block_cache_init(cfg: ArchConfig, spec: BlockSpec, batch: int,
+                     max_seq: int, dtype=jnp.bfloat16) -> Params:
+    """Decode-time state for one block (no 'pos'; that is global)."""
+    c: Params = {}
+    if spec.mixer in ("attn", "attn_bidir"):
+        shape = (batch, cfg.n_kv_heads, max_seq, cfg.head_dim)
+        c["kv"] = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    elif spec.mixer == "mla":
+        c["kv"] = {
+            "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+            "k_pe": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype)}
+    elif spec.mixer in ("mamba", "mlstm"):
+        c["ssm"] = ssd_cache_init(cfg, batch, spec.mixer, dtype)
+    elif spec.mixer == "slstm":
+        c["ssm"] = slstm_cache_init(cfg, batch)
+    return c
+
+
+def block_forward(cfg: ArchConfig, spec: BlockSpec, p: Params, x: jax.Array,
+                  *, positions: jax.Array, pos: Optional[jax.Array] = None,
+                  cache: Optional[Params] = None,
+                  encoder_out: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_cache: Params = {}
+
+    if spec.mixer in ("attn", "attn_bidir"):
+        kvc = None
+        if cache is not None:
+            kvc = dict(cache["kv"]); kvc["pos"] = pos
+        out, nc = attn_forward(cfg, p["mixer"], h, positions=positions,
+                               causal=(spec.mixer == "attn"), cache=kvc)
+        if nc is not None:
+            new_cache["kv"] = nc
+    elif spec.mixer == "mla":
+        kvc = None
+        if cache is not None:
+            kvc = dict(cache["kv"]); kvc["pos"] = pos
+        out, nc = mla_forward(cfg, p["mixer"], h, positions=positions,
+                              cache=kvc)
+        if nc is not None:
+            new_cache["kv"] = nc
+    elif spec.mixer in ("mamba", "mlstm"):
+        out, nc = ssd_forward(cfg, p["mixer"], h, kind=spec.mixer,
+                              cache=cache["ssm"] if cache else None)
+        if nc is not None:
+            new_cache["ssm"] = nc
+    elif spec.mixer == "slstm":
+        out, nc = slstm_forward(cfg, p["mixer"], h,
+                                cache=cache["ssm"] if cache else None)
+        if nc is not None:
+            new_cache["ssm"] = nc
+    else:
+        raise ValueError(spec.mixer)
+    x = x + out
+
+    if spec.cross:
+        assert encoder_out is not None
+        h = rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        out, _ = attn_forward(cfg, p["cross"], h, positions=positions,
+                              causal=False, kv_source=encoder_out)
+        x = x + out
+
+    if spec.ffn != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if spec.ffn == "dense":
+            x = x + ffn_forward(p["ffn"], h)
+        else:
+            out, aux = moe_forward(cfg, p["ffn"], h)
+            x = x + out
+    return x, (new_cache or None), aux

@@ -1,0 +1,100 @@
+"""Shared neural-net building blocks (pure JAX, pytree params)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+Params = dict
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return truncated_normal(key, (d_in, d_out), d_in ** -0.5, dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: Optional[Tuple[int, int, int]] = None
+               ) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, hd); positions: (B, S) or (3, B, S)
+    for M-RoPE (temporal/height/width sections of the frequency axis)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if mrope_sections is not None and positions.ndim == 3:
+        # Qwen2-VL M-RoPE: frequency axis split into (t, h, w) sections,
+        # each rotated by its own position stream.
+        t, h, w = mrope_sections
+        assert t + h + w == hd // 2, (mrope_sections, hd)
+        sect = jnp.concatenate([
+            positions[0][..., None].repeat(t, -1),
+            positions[1][..., None].repeat(h, -1),
+            positions[2][..., None].repeat(w, -1)], axis=-1)  # (B, S, hd/2)
+        angles = sect.astype(jnp.float32) * freqs[None, None, :]
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0) -> jax.Array:
+    """Whisper-style fixed sinusoidal positional embedding (no RoPE).
+
+    ``offset`` may be a traced scalar (decode position).
+    """
+    pos = (offset + jnp.arange(seq)).astype(jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (dim / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------- SwiGLU FFN
+def ffn_init(key, d: int, ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi_gate": dense_init(k1, d, ff, dtype),
+            "wi_up": dense_init(k2, d, ff, dtype),
+            "wo": dense_init(k3, ff, d, dtype)}
+
+
+def ffn_forward(p: Params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+
+
+# ------------------------------------------------------------ loss / logits
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE; logits (B, S, V) any dtype, stable fp32 reduction."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)

@@ -1,0 +1,284 @@
+"""LM assembly: init / forward / loss / prefill / decode.
+
+The layer stack is executed as ``lax.scan`` over *pattern groups* — params
+for each pattern position are stacked with a leading ``n_groups`` axis, so
+HLO size is O(pattern) not O(depth) (critical for 512-way GSPMD lowering).
+Training wraps the scanned group body in ``jax.checkpoint`` (policy
+selectable for the perf hillclimb).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import block_cache_init, block_forward, block_init
+from .config import ArchConfig, BlockSpec
+from .layers import Params, cross_entropy, sinusoidal_positions, truncated_normal
+from .partitioning import BATCH, VOCAB, constrain
+
+# remat policy for the training scan body — hillclimb knob (see §Perf):
+#   "full"  : save nothing, recompute the whole block in backward
+#   "dots"  : save matmul outputs with no batch dims (XLA default heuristics)
+#   "none"  : no remat (memory permitting)
+REMAT_POLICY = "full"
+AUX_LOSS_WEIGHT = 0.01
+# Cost-probe mode: python-unroll the group loop instead of lax.scan so XLA's
+# HloCostAnalysis counts every layer (it counts while-loop bodies exactly
+# once).  Used by the dry-run's 1g/2g probes; never in production lowering.
+UNROLL_GROUPS = False
+# Mixed precision: cast the whole parameter tree to the compute dtype ONCE
+# before the layer scan (one fp32 read of P) instead of per-einsum casts
+# (fp32 reads of every weight every layer, forward and backward).  fp32
+# master copies stay in the optimizer.  §Perf iteration knob.
+CAST_PARAMS_ONCE = True
+
+
+def _remat(fn):
+    if REMAT_POLICY == "none":
+        return fn
+    if REMAT_POLICY == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ------------------------------------------------------------------- init
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab
+    params: Params = {
+        "embed": truncated_normal(keys[0], (v, d), d ** -0.5, dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = truncated_normal(keys[1], (d, v), d ** -0.5, dtype)
+
+    def stacked(spec: BlockSpec, base_key, n: int, layer_idx: int = 1):
+        ks = jax.random.split(base_key, n)
+        return jax.vmap(lambda k: block_init(cfg, spec, k,
+                                             layer_idx=layer_idx,
+                                             dtype=dtype))(ks)
+
+    params["groups"] = tuple(
+        stacked(spec, jax.random.fold_in(keys[2], i), cfg.n_groups)
+        for i, spec in enumerate(cfg.pattern))
+
+    if cfg.first_dense_ff:
+        params["layer0"] = block_init(
+            cfg, BlockSpec(cfg.pattern[0].mixer, "dense"), keys[3],
+            layer_idx=0, dtype=dtype)
+
+    if cfg.is_encdec:
+        enc_spec = BlockSpec("attn_bidir", "dense")
+        params["encoder"] = {
+            "groups": (stacked(enc_spec, keys[4], cfg.encoder_layers),),
+            "final_norm": jnp.zeros((d,), dtype),
+        }
+    return params
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Params:
+    def stacked_cache(spec: BlockSpec):
+        one = block_cache_init(cfg, spec, batch, max_seq, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), one)
+
+    cache: Params = {
+        "pos": jnp.zeros((), jnp.int32),
+        "groups": tuple(stacked_cache(s) for s in cfg.pattern),
+    }
+    if cfg.first_dense_ff:
+        cache["layer0"] = block_cache_init(
+            cfg, BlockSpec(cfg.pattern[0].mixer, "dense"), batch, max_seq,
+            dtype)
+    if cfg.is_encdec:
+        cache["encoder_out"] = jnp.zeros((batch, cfg.n_frames, cfg.d_model),
+                                         dtype)
+    return cache
+
+
+# -------------------------------------------------------------- positions
+def make_positions(cfg: ArchConfig, batch: int, seq: int,
+                   offset: Any = 0) -> jax.Array:
+    """(B, S) positions, or (3, B, S) for M-RoPE (vision grid + text)."""
+    idx = offset + jnp.arange(seq, dtype=jnp.int32)          # absolute
+    if cfg.mrope_sections is None:
+        return jnp.broadcast_to(idx[None, :], (batch, seq))
+    npatch = cfg.n_patches
+    grid = max(int(npatch ** 0.5), 1)
+    is_img = idx < npatch
+    t = jnp.where(is_img, 0, idx - npatch + grid)
+    h = jnp.where(is_img, idx // grid, idx - npatch + grid)
+    w = jnp.where(is_img, idx % grid, idx - npatch + grid)
+    pos3 = jnp.stack([t, h, w])[:, None, :]                  # (3, 1, S)
+    return jnp.broadcast_to(pos3, (3, batch, seq))
+
+
+# ----------------------------------------------------------------- forward
+def _scan_groups(cfg: ArchConfig, groups_params, x, *, positions, pos=None,
+                 caches=None, encoder_out=None, pattern=None, remat=False):
+    """Scan the stacked pattern groups.  Returns (x, new_caches, aux_sum)."""
+    pattern = pattern or cfg.pattern
+
+    def body(carry, xs):
+        h, aux = carry
+        h = constrain(h, BATCH, None, None)
+        if caches is None:
+            p_g = xs
+            c_g = (None,) * len(pattern)
+        else:
+            p_g, c_g = xs
+        new_c = []
+        for i, spec in enumerate(pattern):
+            h, nc, a = block_forward(
+                cfg, spec, p_g[i], h, positions=positions, pos=pos,
+                cache=c_g[i], encoder_out=encoder_out)
+            aux = aux + a
+            new_c.append(nc if nc is not None else 0)
+        return (h, aux), tuple(new_c)
+
+    body_fn = _remat(body) if remat else body
+    xs = groups_params if caches is None else (groups_params, caches)
+    if UNROLL_GROUPS:
+        n = jax.tree.leaves(groups_params)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys = []
+        for g in range(n):
+            carry, y = body_fn(carry, jax.tree.map(lambda a: a[g], xs))
+            ys.append(y)
+        x, aux = carry
+        new_caches = jax.tree.map(lambda *a: jnp.stack(a), *ys) \
+            if caches is not None else None
+        return x, new_caches, aux
+    (x, aux), new_caches = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                        xs)
+    return x, (new_caches if caches is not None else None), aux
+
+
+def _embed(cfg: ArchConfig, params: Params, tokens: jax.Array,
+           embeds: Optional[jax.Array], compute_dtype, offset=0) -> jax.Array:
+    x = constrain(jnp.take(params["embed"], tokens, axis=0),
+                  BATCH, None, None).astype(compute_dtype)
+    if cfg.n_patches and embeds is not None:
+        x = jnp.concatenate([embeds.astype(compute_dtype), x], axis=1)
+    if cfg.rope_theta == 0:       # sinusoidal absolute positions (whisper)
+        pe = sinusoidal_positions(x.shape[1], cfg.d_model, offset)
+        x = x + pe[None].astype(compute_dtype)
+    return x
+
+
+def _encode(cfg: ArchConfig, params: Params, frames: jax.Array,
+            compute_dtype) -> jax.Array:
+    """Audio encoder over stub frame embeddings (B, F, d)."""
+    x = frames.astype(compute_dtype)
+    pe = sinusoidal_positions(x.shape[1], cfg.d_model)
+    x = x + pe[None].astype(compute_dtype)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None],
+                           x.shape[:2])
+    enc_pat = (BlockSpec("attn_bidir", "dense"),)
+    x, _, _ = _scan_groups(cfg, params["encoder"]["groups"], x,
+                           positions=pos, pattern=enc_pat)
+    from .layers import rms_norm
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jax.Array, *,
+            embeds: Optional[jax.Array] = None,
+            cache: Optional[Params] = None,
+            remat: bool = False,
+            last_only: bool = False
+            ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Returns (logits, new_cache, aux_loss).
+
+    tokens: (B, S_text).  embeds: stub frontend output — patch embeddings
+    (VLM, prepended) or audio frames (enc-dec, encoded then cross-attended).
+    """
+    compute = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if CAST_PARAMS_ONCE and compute != jnp.float32:
+        params = jax.tree.map(
+            lambda a: a.astype(compute)
+            if (hasattr(a, "dtype") and a.dtype == jnp.float32
+                and a.ndim >= 2) else a, params)
+    b = tokens.shape[0]
+    x = _embed(cfg, params, tokens, embeds, compute,
+               offset=(cache["pos"] if cache is not None else 0))
+    s = x.shape[1]
+
+    encoder_out = None
+    if cfg.is_encdec:
+        if cache is not None and tokens.shape[1] == 1:
+            encoder_out = cache["encoder_out"].astype(compute)
+        else:
+            assert embeds is not None, "enc-dec needs frame embeds"
+            encoder_out = _encode(cfg, params, embeds, compute)
+
+    pos = cache["pos"] if cache is not None else None
+    positions = make_positions(cfg, b, s, offset=(0 if pos is None else pos))
+
+    new_cache: Optional[Params] = None
+    l0_cache = None
+    if cfg.first_dense_ff:
+        spec0 = BlockSpec(cfg.pattern[0].mixer, "dense")
+        c0 = cache.get("layer0") if cache is not None else None
+        x, l0_cache, _ = block_forward(cfg, spec0, params["layer0"], x,
+                                       positions=positions, pos=pos, cache=c0)
+
+    caches = cache["groups"] if cache is not None else None
+    x, new_group_caches, aux = _scan_groups(
+        cfg, params["groups"], x, positions=positions, pos=pos,
+        caches=caches, encoder_out=encoder_out, remat=remat)
+
+    from .layers import rms_norm
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(compute)
+    logits = constrain(jnp.einsum("bsd,dv->bsv", x, head),
+                       BATCH, None, VOCAB)
+
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["pos"] = cache["pos"] + s
+        new_cache["groups"] = new_group_caches
+        if l0_cache is not None:
+            new_cache["layer0"] = l0_cache
+        if cfg.is_encdec and encoder_out is not None:
+            new_cache["encoder_out"] = encoder_out.astype(
+                cache["encoder_out"].dtype)
+    return logits, new_cache, aux
+
+
+# ------------------------------------------------------------ public steps
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
+            ) -> jax.Array:
+    """Causal-LM loss; batch: tokens (B,S), labels (B,S) [, embeds]."""
+    logits, _, aux = forward(cfg, params, batch["tokens"],
+                             embeds=batch.get("embeds"), remat=True)
+    labels = batch["labels"]
+    if cfg.n_patches:   # VLM: labels only over the text tail
+        logits = logits[:, cfg.n_patches:]
+    return cross_entropy(logits, labels) + AUX_LOSS_WEIGHT * aux
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jax.Array, *,
+            embeds: Optional[jax.Array] = None, max_seq: int,
+            cache_dtype=jnp.bfloat16) -> Tuple[jax.Array, Params]:
+    """Fill a fresh KV/state cache; returns (last-token logits, cache)."""
+    b = tokens.shape[0]
+    cache = init_cache(cfg, b, max_seq, cache_dtype)
+    logits, cache, _ = forward(cfg, params, tokens, embeds=embeds,
+                               cache=cache, last_only=True)
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                token: jax.Array) -> Tuple[jax.Array, Params]:
+    """One serve step: token (B, 1) -> (logits (B, V), updated cache)."""
+    logits, cache, _ = forward(cfg, params, token, cache=cache,
+                               last_only=True)
+    return logits[:, 0], cache

@@ -1,0 +1,266 @@
+"""Sub-quadratic sequence mixers: SSD (Mamba-2-style chunked selective SSM),
+mLSTM (via the same chunked machinery + normalizer channel) and sLSTM.
+
+TPU adaptation (recorded in DESIGN.md): instead of Mamba-1's per-channel
+selective scan (bandwidth-bound, no matmuls), we implement the SSD chunked
+form — intra-chunk attention-like matmuls + inter-chunk state recurrence —
+which maps the recurrence onto the MXU.  mLSTM reuses the identical chunk
+algorithm: its normalizer ``n_t = f n + i k`` is obtained by augmenting the
+value vectors with a constant-1 channel, so one kernel serves both block
+types.
+
+Decode is the exact O(1) recurrence on a (B, H, N, P) state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, dense_init, rms_norm
+from .partitioning import BATCH, FF, HEADS, constrain
+
+# store the intra-chunk decay/score operands in bf16 (fp32 accumulation);
+# perf-iteration knob, see EXPERIMENTS.md §Perf (jamba cell).
+INTRA_BF16 = True
+
+
+# --------------------------------------------------------------------- init
+def ssd_init(cfg: ArchConfig, key, kind: str, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    din = cfg.ssd_expand * d
+    nh = din // cfg.ssd_head_dim
+    n = cfg.ssd_d_state
+    ks = jax.random.split(key, 8)
+    p = {
+        "wz": dense_init(ks[0], d, din, dtype),
+        "wx": dense_init(ks[1], d, din, dtype),
+        "wB": dense_init(ks[2], d, n, dtype),
+        "wC": dense_init(ks[3], d, n, dtype),
+        "wdt": dense_init(ks[4], d, nh, dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, float(nh), nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv": (jax.random.normal(ks[5], (cfg.conv_dim, din)) * 0.1
+                 ).astype(dtype),
+        "wo": dense_init(ks[6], din, d, dtype),
+        "norm": jnp.zeros((din,), dtype),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, window W.  x: (B, S, C); w: (W, C).
+
+    Returns (out, new_state) where state caches the last W-1 inputs.
+    """
+    wlen = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], wlen - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(wlen))
+    new_state = xp[:, -(wlen - 1):] if wlen > 1 else state
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+# ----------------------------------------------------------- chunked scan
+def ssd_chunked(x: jax.Array, log_a: jax.Array, B: jax.Array, C: jax.Array,
+                chunk: int, h0: Optional[jax.Array] = None,
+                intra_dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """Chunked linear recurrence  h_t = a_t h_{t-1} + B_t x_t^T ; y_t = C_t h_t.
+
+    x: (Bt, S, H, P); log_a: (Bt, S, H) (log decay, <= 0);
+    B, C: (Bt, S, N).  Returns (y (Bt,S,H,P), h_final (Bt,H,N,P)).
+    """
+    bt, s, h, pdim = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xr = x.reshape(bt, nc, q, h, pdim)
+    lar = log_a.reshape(bt, nc, q, h)
+    Br = B.reshape(bt, nc, q, n)
+    Cr = C.reshape(bt, nc, q, n)
+
+    cum = jnp.cumsum(lar, axis=2)                       # (bt,nc,q,h)
+    total = cum[:, :, -1:]                              # (bt,nc,1,h)
+
+    # ---- intra-chunk (causal masked, decay-weighted attention) -----------
+    # The (bt, nc, q, k, h) decay-weight tensor is the memory hot spot of
+    # hybrid-SSM training (jamba: ~2 GB/chip/layer in fp32).  The exponent
+    # is computed in fp32 for stability, but the materialized weight and the
+    # score operand are stored bf16 with fp32 einsum accumulation
+    # (preferred_element_type) — halves the dominant HBM term (§Perf).
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cr, Br)      # (bt,nc,q,q)
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (bt,nc,q,k,h)
+    dec = constrain(dec, BATCH, None, None, None, HEADS)
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+    w = jnp.where(mask[None, None, :, :, None], jnp.exp(dec), 0.0)
+    wdt = intra_dtype if INTRA_BF16 else jnp.float32
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp",
+                         scores.astype(wdt), w.astype(wdt), xr.astype(wdt),
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk summaries & inter-chunk recurrence -------------------------
+    decay_to_end = jnp.exp(total - cum)                 # (bt,nc,q,h)
+    T = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Br.astype(jnp.float32),
+                   decay_to_end, xr.astype(jnp.float32))  # (bt,nc,h,n,p)
+    chunk_decay = jnp.exp(total[:, :, 0])               # (bt,nc,h)
+
+    def scan_fn(hprev, inp):
+        Tc, dc = inp                                    # (bt,h,n,p), (bt,h)
+        hnew = hprev * dc[:, :, None, None] + Tc
+        return hnew, hprev                              # emit state *before*
+
+    if h0 is None:
+        h0 = jnp.zeros((bt, h, n, pdim), jnp.float32)
+    hT, h_before = jax.lax.scan(
+        scan_fn, h0,
+        (T.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)        # (bt,nc,h,n,p)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cr.astype(jnp.float32), jnp.exp(cum), h_before)
+    y = (y_intra + y_inter).reshape(bt, s, h, pdim)
+    return y, hT
+
+
+def ssd_decode_step(x, log_a, B, C, h
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. x: (Bt,1,H,P); B,C: (Bt,1,N); h: (Bt,H,N,P)."""
+    a = jnp.exp(log_a[:, 0]).astype(jnp.float32)        # (Bt,H)
+    hnew = (h * a[:, :, None, None]
+            + jnp.einsum("bn,bhp->bhnp", B[:, 0].astype(jnp.float32),
+                         x[:, 0].astype(jnp.float32)))
+    y = jnp.einsum("bn,bhnp->bhp", C[:, 0].astype(jnp.float32), hnew)
+    return y[:, None], hnew                              # (Bt,1,H,P)
+
+
+# ------------------------------------------------------------- block fwd
+def ssd_forward(cfg: ArchConfig, p: Params, x: jax.Array, *, kind: str,
+                cache: Optional[Params] = None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """Mamba(SSD) / mLSTM block.  x: (B, S, d)."""
+    b, s, d = x.shape
+    din = cfg.ssd_expand * d
+    nh = din // cfg.ssd_head_dim
+    pd = cfg.ssd_head_dim
+    dt_ = x.dtype
+
+    z = constrain(jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_)),
+                  BATCH, None, FF)
+    xs = constrain(jnp.einsum("bsd,de->bse", x, p["wx"].astype(dt_)),
+                   BATCH, None, FF)
+    conv_state = cache["conv"] if cache is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv"].astype(dt_), conv_state)
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(dt_))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dt_)
+                        ).astype(jnp.float32)
+
+    if kind == "mamba":
+        delta = jax.nn.softplus(dt_raw + p["dt_bias"])       # (b,s,h)
+        log_a = -delta * jnp.exp(p["A_log"])                 # <= 0
+        gate_in = delta                                      # dt-scaled input
+    else:  # mlstm: sigmoid forget / input gates (stabilized xLSTM variant)
+        log_a = jax.nn.log_sigmoid(dt_raw + p["dt_bias"])    # forget gate
+        gate_in = jax.nn.sigmoid(dt_raw - p["dt_bias"])      # input gate
+
+    xh = constrain(xs.reshape(b, s, nh, pd), BATCH, None, HEADS, None
+                   ).astype(jnp.float32) * gate_in[..., None]
+    if kind == "mlstm":
+        # normalizer channel: value vectors augmented with constant 1
+        xh = jnp.concatenate(
+            [xh, jnp.ones((b, s, nh, 1), jnp.float32)], axis=-1)
+
+    if cache is not None and s == 1:
+        y, hT = ssd_decode_step(xh, log_a, Bm, Cm, cache["state"])
+        new_cache = {"state": hT, "conv": new_conv}
+    elif cache is not None:
+        # prefill: chunked scan seeded from (zero) cached state
+        y, hT = ssd_chunked(xh, log_a, Bm, Cm, cfg.ssd_chunk,
+                            h0=cache["state"], intra_dtype=dt_)
+        new_cache = {"state": hT, "conv": new_conv}
+    else:
+        y, hT = ssd_chunked(xh, log_a, Bm, Cm, cfg.ssd_chunk,
+                            intra_dtype=dt_)
+        new_cache = None
+
+    if kind == "mlstm":
+        yv, norm = y[..., :pd], y[..., pd:]
+        y = yv / jnp.maximum(jnp.abs(norm), 1.0)
+    else:
+        y = y + xh[..., :pd] * p["D"][None, None, :, None]
+
+    y = y.reshape(b, s, din).astype(dt_)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt_))
+    return out, new_cache
+
+
+def ssd_cache_init(cfg: ArchConfig, batch: int, kind: str = "mamba",
+                   dtype=jnp.float32) -> Params:
+    din = cfg.ssd_expand * cfg.d_model
+    nh = din // cfg.ssd_head_dim
+    pd = cfg.ssd_head_dim + (1 if kind == "mlstm" else 0)
+    return {
+        "state": jnp.zeros((batch, nh, cfg.ssd_d_state, pd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_dim - 1, din), dtype),
+    }
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_init(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {"wx": dense_init(k1, d, 4 * d, dtype),
+            "wh": (dense_init(k2, d, 4 * d, dtype) * 0.1),
+            "b": jnp.zeros((4 * d,), jnp.float32),
+            "norm": jnp.zeros((d,), dtype)}
+
+
+def slstm_forward(cfg: ArchConfig, p: Params, x: jax.Array, *,
+                  cache: Optional[Params] = None
+                  ) -> Tuple[jax.Array, Optional[Params]]:
+    """Sequential sLSTM (sigmoid-stabilized gates), scan over time."""
+    b, s, d = x.shape
+    dt_ = x.dtype
+    gx = (jnp.einsum("bsd,dg->bsg", x, p["wx"].astype(dt_))
+          .astype(jnp.float32) + p["b"])
+
+    def step(carry, gxt):
+        h, c, n = carry
+        gh = jnp.einsum("bd,dg->bg", h, p["wh"].astype(jnp.float32)
+                        .astype(h.dtype)).astype(jnp.float32)
+        g = gxt + gh
+        i, f, zc, o = jnp.split(g, 4, axis=-1)
+        i = jax.nn.sigmoid(i)
+        f = jax.nn.sigmoid(f)
+        c = f * c + i * jnp.tanh(zc)
+        n = f * n + i
+        h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+        return (h, c, n), h
+
+    if cache is not None:
+        carry = (cache["h"], cache["c"], cache["n"])
+    else:
+        zero = jnp.zeros((b, d), jnp.float32)
+        carry = (zero, zero, zero)
+    (h, c, n), hs = jax.lax.scan(step, carry, gx.transpose(1, 0, 2))
+    out = hs.transpose(1, 0, 2).astype(dt_)
+    out = rms_norm(out, p["norm"], cfg.norm_eps)
+    new_cache = {"h": h, "c": c, "n": n} if cache is not None else None
+    return out, new_cache
+
+
+def slstm_cache_init(cfg: ArchConfig, batch: int) -> Params:
+    zero = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return {"h": zero, "c": zero, "n": zero}

@@ -1,0 +1,220 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (per-device
+SPMD program, so we multiply by chip count for the global numerator — the
+two conventions cancel).  Collective bytes are parsed from the post-SPMD
+HLO text: we sum the output-shape bytes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute (async ``-start`` counted,
+``-done`` skipped).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (conservative single-link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape expression like 'bf16[8,128,2048]'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# Opcodes whose outputs must round-trip HBM even under TPU fusion; pure
+# elementwise/broadcast/convert/select chains fuse into their consumers on
+# TPU (the XLA:CPU module we analyse barely fuses, so raw cost_analysis
+# "bytes accessed" overstates HBM traffic ~50x — we report it as the upper
+# bound and this fusion-modeled sum as the roofline memory numerator).
+_MATERIALIZING = ("dot", "fusion", "reduce", "scatter", "gather",
+                  "dynamic-slice", "dynamic-update-slice", "copy",
+                  "transpose", "concatenate", "reduce-window", "sort",
+                  "convolution",
+                  "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_READ_ONCE = ("parameter",)
+
+
+def fused_bytes(hlo_text: str) -> int:
+    """Fusion-modeled HBM bytes: 2x output bytes of materializing ops.
+
+    Elementwise chains are assumed fused (reads/writes stay in VMEM); every
+    materializing op is charged one write plus one read by its consumer.
+    Instructions inside ``%fused_computation`` bodies are skipped (their
+    cost is the caller's single ``fusion`` op) and ``parameter`` lines are
+    only charged in the ENTRY computation (nested computations re-declare
+    their operands as parameters).
+    """
+    total = 0
+    in_entry = False
+    in_fused = False
+    for line in hlo_text.splitlines():
+        comp = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->", line)
+        if comp and "=" not in line.split("->")[0]:
+            in_entry = bool(comp.group(1))
+            in_fused = "fused" in comp.group(2)
+            continue
+        if in_fused:
+            continue
+        m = re.match(r"\s*(?:ROOT )?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)"
+                     r"\s+([\w\-]+)", line)
+        if not m:
+            continue
+        shape_str, opcode = m.group(1), m.group(2)
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base in _MATERIALIZING:
+            total += 2 * _shape_bytes(shape_str)
+        elif base in _READ_ONCE and in_entry:
+            total += _shape_bytes(shape_str)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (output-shape proxy)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", line)
+        if not m:
+            continue
+        shape_str, opcode = m.group(1), m.group(2)
+        for kind in _COLLECTIVES:
+            if opcode == kind or opcode == kind + "-start":
+                out[kind] += _shape_bytes(shape_str)
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def count_collective_ops(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+)\s+([\w\-]+)",
+                     line)
+        if m:
+            op = m.group(1)
+            for kind in _COLLECTIVES:
+                if op == kind or op == kind + "-start":
+                    out[kind] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float          # raw cost_analysis (upper bound)
+    collective_bytes_per_chip: float
+    model_flops_global: float          # 6*N_active*tokens (or 2*N for serve)
+    per_device_memory: Optional[float] = None
+    collective_breakdown: Optional[Dict[str, int]] = None
+    fused_bytes_per_chip: float = 0.0  # fusion-modeled HBM traffic
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        """Fusion-modeled HBM time (falls back to the raw upper bound)."""
+        b = self.fused_bytes_per_chip or self.hlo_bytes_per_chip
+        return b / HBM_BW
+
+    @property
+    def memory_upper_s(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/dispatch/recompute waste."""
+        hlo_global = self.hlo_flops_per_chip * self.chips
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilisation at the roofline step time."""
+        return (self.model_flops_global
+                / (self.chips * PEAK_FLOPS * max(self.step_time_s, 1e-12)))
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 memory_upper_s=self.memory_upper_s,
+                 collective_s=self.collective_s, bottleneck=self.bottleneck,
+                 step_time_s=self.step_time_s, mfu=self.mfu,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
+                  compiled, model_flops_global: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0)
+                    + getattr(ma, "argument_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0)
+                    - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops_per_chip=flops, hlo_bytes_per_chip=byts,
+                    collective_bytes_per_chip=float(coll["total"]),
+                    model_flops_global=model_flops_global,
+                    per_device_memory=mem,
+                    collective_breakdown=coll)

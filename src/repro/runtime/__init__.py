@@ -1,0 +1,1 @@
+from .fault_tolerance import ResilientLoop, StragglerMonitor, degrade_topology

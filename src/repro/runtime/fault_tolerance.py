@@ -1,0 +1,107 @@
+"""Fault-tolerant training-loop runtime.
+
+Pieces (each exercised by tests/test_fault_tolerance.py):
+
+* :class:`ResilientLoop` — checkpoint/restart supervisor: periodic async
+  checkpoints, crash detection, resume with bitwise-identical data order
+  (the data stream is seekable) and optimizer state.
+* :class:`StragglerMonitor` — per-step wall-time EWMA + outlier detection.
+  On a real pod this feeds the preemption signal; here it triggers a
+  logged mitigation decision (skip-node / rebalance) that the test asserts.
+* Elastic re-meshing is handled at the checkpoint layer: arrays are stored
+  unsharded and re-placed on the *current* mesh at restore
+  (checkpoint.restore(shard_fn=...)).
+
+1000+-node design notes (DESIGN.md §fault-tolerance): the gossip consensus
+of DeEPCA is itself failure-tolerant — FastMix only requires a connected
+(possibly time-varying) graph, so a dead agent is handled by dropping its
+edges and renormalizing the mixing row (Remark 3 of the paper); no global
+barrier is required, unlike all-reduce-based PCA.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
+                                         restore)
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA step-time tracker; flags steps slower than ``threshold`` x EWMA."""
+
+    threshold: float = 3.0
+    alpha: float = 0.1
+    ewma: Optional[float] = None
+    events: List[Dict] = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        is_straggler = (self.ewma is not None
+                        and dt > self.threshold * self.ewma)
+        if is_straggler:
+            self.events.append({"step": step, "dt": dt, "ewma": self.ewma,
+                                "action": "flag-for-rebalance"})
+        else:   # only fold non-outliers into the running estimate
+            self.ewma = dt if self.ewma is None else \
+                (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler
+
+
+@dataclasses.dataclass
+class ResilientLoop:
+    """Supervised step loop: run -> crash -> restore -> continue.
+
+    ``state`` is any pytree (params + optimizer + data step).  The
+    step_fn may raise; the loop checkpoints every ``ckpt_every`` steps and
+    can resume from the last complete checkpoint.
+    """
+
+    ckpt_dir: str
+    ckpt_every: int = 10
+    keep: int = 3
+
+    def __post_init__(self):
+        self._ckpt = AsyncCheckpointer(self.ckpt_dir, keep=self.keep)
+        self.monitor = StragglerMonitor()
+
+    def resume_or_init(self, init_fn: Callable[[], Any], template: Any = None):
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return init_fn(), 0
+        template = template if template is not None else init_fn()
+        state, step = restore(self.ckpt_dir, template)
+        return state, step
+
+    def run(self, state: Any, start_step: int, n_steps: int,
+            step_fn: Callable[[Any, int], Any],
+            on_step: Optional[Callable[[int, Any], None]] = None) -> Any:
+        try:
+            for step in range(start_step, n_steps):
+                t0 = time.perf_counter()
+                state = step_fn(state, step)
+                self.monitor.record(step, time.perf_counter() - t0)
+                if (step + 1) % self.ckpt_every == 0:
+                    self._ckpt.save_async(step + 1, state)
+                if on_step:
+                    on_step(step, state)
+        finally:
+            # a crash must not lose the in-flight checkpoint write
+            self._ckpt.wait()
+        return state
+
+
+def degrade_topology(mixing_row_drop: "np.ndarray", dead: List[int]):
+    """Drop dead agents from a gossip matrix and renormalize (Remark 3)."""
+    import numpy as np
+    L = np.array(mixing_row_drop, dtype=np.float64)
+    keep = [i for i in range(L.shape[0]) if i not in set(dead)]
+    L = L[np.ix_(keep, keep)]
+    # re-apply the paper's construction on the surviving subgraph
+    adj = (L > 0).astype(np.float64)
+    np.fill_diagonal(adj, 0.0)
+    from repro.core.topology import _finalize
+    return _finalize(f"degraded{len(keep)}", adj)

@@ -1,0 +1,54 @@
+"""Decentralized DeEPCA-compressed training step on fake devices:
+loss must decrease and agent parameter copies must stay in consensus."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.core.topology import ring
+    from repro.data import SyntheticTokenStream, TokenStreamConfig
+    from repro.launch.steps import make_train_step_compressed
+    from repro.models import init_params
+    from repro.optim import AdamW
+
+    cfg = get_reduced("smollm_135m")
+    m = 8
+    mesh = jax.make_mesh((m,), ("agents",))
+    topo = ring(m)
+    opt = AdamW(lr=3e-3)
+    step, init_cs = make_train_step_compressed(cfg, opt, mesh, topo,
+                                               rank=8, K=6)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ostate = opt.init(params)
+    cstate = init_cs(params)
+    stream = SyntheticTokenStream(TokenStreamConfig(
+        vocab=cfg.vocab, seq_len=32, global_batch=m * 2))
+    jstep = jax.jit(step)
+    losses = []
+    for i, raw in zip(range(40), iter(stream)):
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        params, ostate, cstate, loss = jstep(params, ostate, cstate, batch)
+        losses.append(float(loss))
+    print("first", losses[0], "last", losses[-1])
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+    print("ALLOK")
+""")
+
+
+@pytest.mark.slow
+def test_compressed_decentralized_training_learns():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, (out.stdout[-800:], out.stderr[-3000:])
+    assert "ALLOK" in out.stdout

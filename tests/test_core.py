@@ -1,0 +1,198 @@
+"""Unit + property tests for the paper's core algorithm suite."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Topology, ring, torus2d, hypercube, complete, erdos_renyi, make_topology,
+    validate_mixing, fastmix, naive_mix, fastmix_eta, consensus_error,
+    StackedOperators, synthetic_spiked, libsvm_like, top_k_eigvecs,
+    deepca, depca, centralized_power_method, sign_adjust, metrics,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------- topology
+@pytest.mark.parametrize("topo", [
+    ring(8), torus2d(4, 4), hypercube(8), complete(6),
+    erdos_renyi(12, p=0.5, seed=3),
+])
+def test_mixing_matrix_properties(topo):
+    diag = validate_mixing(topo.mixing)
+    assert 0.0 <= topo.lambda2 < 1.0
+    assert topo.spectral_gap > 0.0
+
+
+def test_paper_topology_spectral_gap():
+    # paper Section 5: m=50, ER(p=0.5) gives 1 - lambda2 approx 0.4563.
+    topo = erdos_renyi(50, p=0.5, seed=0)
+    assert 0.25 < topo.spectral_gap < 0.65   # same regime as the paper
+
+
+def test_fastmix_beats_naive_gossip():
+    topo = ring(16)
+    assert topo.fastmix_rate(10) < topo.naive_rate(10)
+
+
+# ----------------------------------------------------------------- mixing
+@given(st.integers(2, 12), st.integers(1, 8), st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_fastmix_preserves_mean(m, k, seed):
+    """Prop. 1 first claim: the agent-mean is exactly invariant."""
+    topo = complete(m) if m < 4 else erdos_renyi(m, p=0.7, seed=seed)
+    rng = np.random.default_rng(seed)
+    S = jnp.asarray(rng.standard_normal((m, 5, k)), dtype=jnp.float32)
+    out = fastmix(S, jnp.asarray(topo.mixing, jnp.float32),
+                  fastmix_eta(topo.lambda2), K=7)
+    np.testing.assert_allclose(np.mean(out, axis=0), np.mean(S, axis=0),
+                               rtol=0, atol=1e-4)
+
+
+def test_fastmix_contraction_matches_proposition1():
+    """Consensus error contracts at least as fast as (1-sqrt(1-lam2))^K."""
+    topo = ring(16)
+    rng = np.random.default_rng(0)
+    S = jnp.asarray(rng.standard_normal((16, 32, 4)), dtype=jnp.float32)
+    e0 = float(consensus_error(S))
+    for K in (4, 8, 16):
+        out = fastmix(S, jnp.asarray(topo.mixing, jnp.float32),
+                      fastmix_eta(topo.lambda2), K=K)
+        assert float(consensus_error(out)) <= topo.fastmix_rate(K) * e0 * 1.05
+
+
+# ---------------------------------------------------------------- metrics
+def test_tan_theta_identities():
+    rng = np.random.default_rng(0)
+    d, k = 20, 4
+    U = jnp.asarray(np.linalg.qr(rng.standard_normal((d, k)))[0], jnp.float32)
+    assert float(metrics.tan_theta_k(U, U)) < 1e-5
+    # orthogonal complement has angle pi/2 -> tan ~ inf
+    V = jnp.asarray(np.linalg.qr(rng.standard_normal((d, d)))[0][:, k:2 * k],
+                    jnp.float32)
+    Vp = V - U @ (U.T @ V)
+    assert float(metrics.tan_theta_k(U, Vp)) > 1e4
+
+
+def test_sign_adjust():
+    rng = np.random.default_rng(1)
+    W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((10, 3)))[0], jnp.float32)
+    W = W0 * jnp.asarray([[-1.0, 1.0, -1.0]])
+    out = sign_adjust(W, W0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(W0), atol=1e-6)
+    # batched (stacked) form
+    Wb = jnp.stack([W, W0])
+    outb = sign_adjust(Wb, W0)
+    np.testing.assert_allclose(np.asarray(outb[0]), np.asarray(W0), atol=1e-6)
+
+
+# ------------------------------------------------------------- algorithms
+def _setup(m=10, d=24, k=3, seed=0, het=1.0):
+    ops = synthetic_spiked(m, d, k, n_per_agent=40, seed=seed,
+                           heterogeneity=het)
+    A = ops.mean_matrix()
+    U, evals = top_k_eigvecs(A, k)
+    rng = np.random.default_rng(seed + 1)
+    W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((d, k)))[0], jnp.float32)
+    return ops, A, U, evals, W0
+
+
+def test_centralized_power_method_converges():
+    ops, A, U, evals, W0 = _setup()
+    out = centralized_power_method(A, W0, iters=80, U=U)
+    assert float(out["tan_theta"][-1]) < 1e-3
+
+
+def test_deepca_converges_with_fixed_K():
+    """Headline claim: fixed small K reaches high precision (eps-independent)."""
+    ops, A, U, evals, W0 = _setup()
+    topo = erdos_renyi(10, p=0.5, seed=2)
+    res = deepca(ops, topo, W0, k=3, T=100, K=6, U=U)
+    final = float(res.trace.mean_tan_theta[-1])
+    assert final < 5e-3, f"DeEPCA failed to converge: tan={final}"
+    # consensus error must also vanish (Lemma 1, second claim)
+    assert float(res.trace.s_consensus[-1]) < 1e-2 * float(res.trace.s_consensus[0] + 1e-9) + 1e-4
+
+
+def test_deepca_linear_rate_tracks_centralized():
+    ops, A, U, evals, W0 = _setup()
+    topo = erdos_renyi(10, p=0.5, seed=2)
+    res = deepca(ops, topo, W0, k=3, T=60, K=8, U=U)
+    cen = centralized_power_method(A, W0, iters=60, U=U)
+    # after the transient, DeEPCA's error should be within ~10x of centralized
+    de = float(res.trace.tan_theta_mean[40])
+    ce = float(cen["tan_theta"][40])
+    assert de < max(10.0 * ce, 1e-2)
+
+
+def test_depca_floors_but_deepca_does_not():
+    """Paper Figs 1-2: with small fixed K, DePCA stalls; DeEPCA converges."""
+    ops, A, U, evals, W0 = _setup(het=2.0)
+    topo = erdos_renyi(10, p=0.5, seed=2)
+    de = deepca(ops, topo, W0, k=3, T=120, K=5, U=U)
+    dp = depca(ops, topo, W0, k=3, T=120, K=5, U=U)
+    assert float(de.trace.mean_tan_theta[-1]) < 1e-2
+    assert float(dp.trace.mean_tan_theta[-1]) > \
+        5.0 * float(de.trace.mean_tan_theta[-1])
+
+
+def test_deepca_tiny_K_diverges_or_stalls():
+    """Fig. 1 col 1: K too small for the heterogeneity -> no convergence."""
+    ops, A, U, evals, W0 = _setup(het=3.0, seed=5)
+    topo = ring(10)   # weak connectivity
+    res = deepca(ops, topo, W0, k=3, T=80, K=1, U=U)
+    assert float(res.trace.mean_tan_theta[-1]) > 1e-3
+
+
+def test_deepca_implicit_gram_equals_dense():
+    """Implicit X^T X operator must give identical iterates to dense A_j."""
+    ops, A, U, evals, W0 = _setup(m=6, d=16, k=2)
+    X = ops.data
+    dense = jnp.einsum("mnd,mne->mde", X, X)
+    ops_dense = StackedOperators(dense=dense)
+    topo = complete(6)
+    r1 = deepca(ops, topo, W0, k=2, T=20, K=4, U=U)
+    r2 = deepca(ops_dense, topo, W0, k=2, T=20, K=4, U=U)
+    np.testing.assert_allclose(np.asarray(r1.W), np.asarray(r2.W),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_deepca_tolerates_non_psd_locals():
+    """Remark 1: A_j need not be PSD, only the average A must be."""
+    m, d, k = 8, 20, 2
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((d, d))
+    A = base @ base.T / d + np.diag(np.linspace(2, 0, d))
+    perturb = rng.standard_normal((m, d, d))
+    perturb = (perturb + np.transpose(perturb, (0, 2, 1))) / 2
+    perturb -= perturb.mean(axis=0, keepdims=True)     # zero-mean, non-PSD
+    A_j = A[None] + 0.5 * perturb
+    ops = StackedOperators(dense=jnp.asarray(A_j, jnp.float32))
+    U, _ = top_k_eigvecs(jnp.asarray(A, jnp.float32), k)
+    W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((d, k)))[0], jnp.float32)
+    topo = erdos_renyi(m, p=0.6, seed=1)
+    res = deepca(ops, topo, W0, k=k, T=150, K=8, U=U)
+    assert float(res.trace.mean_tan_theta[-1]) < 1e-2
+
+
+@given(st.integers(0, 6))
+@settings(max_examples=6, deadline=None)
+def test_property_deepca_mean_is_tracked(seed):
+    """Lemma 2 invariant: S_bar^t == G_bar^t == mean_j A_j W_j^{t-1} exactly
+    (FastMix preserves means, tracking telescopes)."""
+    ops, A, U, evals, W0 = _setup(m=6, d=12, k=2, seed=seed)
+    topo = complete(6)
+    res = deepca(ops, topo, W0, k=2, T=3, K=3, U=U)
+    # recompute G_bar at final step from the returned W history is internal;
+    # instead check: mean of S after one run of T=1 equals mean_j A_j W0.
+    res1 = deepca(ops, topo, W0, k=2, T=1, K=3, U=U)
+    G = ops.apply(jnp.broadcast_to(W0, (6,) + W0.shape))
+    want = np.mean(np.asarray(G), axis=0)
+    # trace doesn't expose S, rerun manually: S^1 = mix(S0 + G - G_prev), mean
+    # invariance of mix means mean(S^1) = mean(W0 + G - W0) = mean(G).
+    # We verify via consensus trace: tan_theta_mean uses S_bar.
+    got_tan = float(res1.trace.tan_theta_mean[0])
+    want_tan = float(metrics.tan_theta_k(U, jnp.asarray(want)))
+    assert abs(got_tan - want_tan) < 1e-3 * (1 + want_tan)

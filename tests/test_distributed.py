@@ -1,0 +1,52 @@
+"""Distributed (shard_map) DeEPCA == stacked simulator, run on fake devices.
+
+jax locks the device count at first backend init, so the multi-device check
+runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import (ring, hypercube, erdos_renyi, synthetic_spiked,
+                            top_k_eigvecs, deepca, DistributedDeEPCA)
+
+    m, d, k = 8, 24, 3
+    ops = synthetic_spiked(m, d, k, n_per_agent=32, seed=0)
+    dense = jnp.einsum("mnd,mne->mde", ops.data, ops.data)
+    from repro.core import StackedOperators
+    ops_dense = StackedOperators(dense=dense)
+    U, _ = top_k_eigvecs(ops_dense.mean_matrix(), k)
+    rng = np.random.default_rng(1)
+    W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((d, k)))[0], jnp.float32)
+
+    mesh = Mesh(np.array(jax.devices()).reshape(8), ("agents",))
+    for topo in (ring(8), hypercube(8), erdos_renyi(8, p=0.6, seed=4)):
+        ref = deepca(ops_dense, topo, W0, k=k, T=12, K=5, U=U)
+        dd = DistributedDeEPCA(mesh, topo, k=k, K=5, T=12)
+        W, S = dd.run(dense, W0)
+        err = float(jnp.max(jnp.abs(W - ref.W)))
+        assert err < 2e-3, (topo.name, err)
+        print("OK", topo.name, err)
+    print("ALLOK")
+""")
+
+
+@pytest.mark.slow
+def test_shard_map_matches_stacked_simulator():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ALLOK" in out.stdout

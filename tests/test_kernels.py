@@ -1,0 +1,112 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ------------------------------------------------------------------- gram
+@pytest.mark.parametrize("n,d", [(8, 8), (64, 48), (130, 256), (257, 100),
+                                 (512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_matches_ref(n, d, dtype):
+    rng = np.random.default_rng(n * 1000 + d)
+    x = jnp.asarray(rng.standard_normal((n, d)), dtype=dtype)
+    got = ops.gram(x, block_d=128, block_n=128, interpret=True)
+    want = ref.gram_ref(x)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@given(st.integers(1, 80), st.integers(1, 70), st.integers(0, 5))
+@settings(max_examples=12, deadline=None)
+def test_gram_property_random_shapes(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, d)), dtype=jnp.float32)
+    got = ops.gram(x, block_d=32, block_n=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.gram_ref(x)),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ----------------------------------------------------------- power_matmul
+@pytest.mark.parametrize("d,k", [(16, 1), (64, 4), (200, 8), (256, 32),
+                                 (300, 17)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_power_matmul_matches_ref(d, k, dtype):
+    rng = np.random.default_rng(d + k)
+    a = jnp.asarray(rng.standard_normal((d, d)), dtype=dtype)
+    w = jnp.asarray(rng.standard_normal((d, k)), dtype=dtype)
+    got = ops.power_matmul(a, w, block_m=128, block_k=128, interpret=True)
+    want = ref.power_matmul_ref(a, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * np.sqrt(d) * 4)
+
+
+# --------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("sq,skv,hd,causal", [
+    (32, 32, 16, True), (32, 32, 16, False),
+    (64, 64, 32, True), (40, 72, 16, False),
+    (128, 128, 64, True),
+])
+def test_flash_single_head(sq, skv, hd, causal):
+    if causal and sq != skv:
+        pytest.skip("causal requires square for this test")
+    rng = np.random.default_rng(sq + skv + hd)
+    q = jnp.asarray(rng.standard_normal((sq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((skv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((skv, hd)), jnp.float32)
+    from repro.kernels.flash_attention import flash_attention_single
+    got = flash_attention_single(q, k, v, causal=causal, block_q=16,
+                                 block_kv=16, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_gqa_batched(h, hkv, dtype):
+    rng = np.random.default_rng(h * 10 + hkv)
+    b, s, hd = 2, 48, 16
+    q = jnp.asarray(rng.standard_normal((b, h, s, hd)), dtype=dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, hd)), dtype=dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, hd)), dtype=dtype)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=16, block_kv=16,
+                              interpret=True)
+    want = ref.mha_ref(q, k, v, causal=True)
+    tol = 3e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_block_shape_invariance():
+    """Output must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    from repro.kernels.flash_attention import flash_attention_single
+    a = flash_attention_single(q, k, v, block_q=16, block_kv=16,
+                               interpret=True)
+    b = flash_attention_single(q, k, v, block_q=64, block_kv=32,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_kernels_used_by_deepca_path():
+    """ops.gram/power_matmul glue into the DeEPCA local step correctly."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((50, 40)), jnp.float32)
+    w = jnp.asarray(np.linalg.qr(rng.standard_normal((40, 4)))[0], jnp.float32)
+    a = ops.gram(x, interpret=True)
+    g = ops.power_matmul(a, w, interpret=True)
+    want = ref.gram_ref(x) @ w
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want), rtol=1e-4,
+                               atol=1e-3)

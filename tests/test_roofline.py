@@ -1,0 +1,72 @@
+"""Unit tests for the roofline HLO parsers and term arithmetic."""
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (Roofline, collective_bytes,
+                                     count_collective_ops, fused_bytes,
+                                     _shape_bytes, PEAK_FLOPS, HBM_BW, ICI_BW)
+
+_HLO = """\
+HloModule test
+
+%fused_computation (p0: f32[128,128]) -> f32[128,128] {
+  %p0 = f32[128,128] parameter(0)
+  ROOT %m = f32[128,128] multiply(%p0, %p0)
+}
+
+ENTRY %main_spmd (a: f32[128,128], b: bf16[64,64]) -> f32[128,128] {
+  %a = f32[128,128] parameter(0)
+  %b = bf16[64,64] parameter(1)
+  %d = f32[128,128] dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,128] all-reduce(%d), replica_groups={}
+  %ag-start = (f32[128,128], f32[256,128]) all-gather-start(%ar), dimensions={0}
+  %ag = f32[256,128] all-gather-done(%ag-start)
+  %c = f32[128,128] convert(%b)
+  ROOT %f = f32[128,128] fusion(%ar), kind=kLoop, calls=%fused_computation
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,128]") == 128 * 128 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[2,2], bf16[2,2])") == 16 + 8
+
+
+def test_collective_bytes_counts_start_not_done():
+    c = collective_bytes(_HLO)
+    assert c["all-reduce"] == 128 * 128 * 4
+    # -start counted once (tuple output), -done skipped
+    assert c["all-gather"] == (128 * 128 + 256 * 128) * 4
+    assert c["reduce-scatter"] == 0
+    ops = count_collective_ops(_HLO)
+    assert ops["all-reduce"] == 1 and ops["all-gather"] == 1
+
+
+def test_fused_bytes_skips_fusion_bodies_and_nested_params():
+    fb = fused_bytes(_HLO)
+    # entry params once: a + b; dot, fusion, collectives 2x; convert free;
+    # the multiply inside %fused_computation NOT counted.
+    expect = (128 * 128 * 4 + 64 * 64 * 2)          # parameters
+    expect += 2 * 128 * 128 * 4                      # dot
+    expect += 2 * 128 * 128 * 4                      # all-reduce
+    expect += 2 * (128 * 128 + 256 * 128) * 4        # all-gather-start
+    expect += 2 * 128 * 128 * 4                      # fusion
+    assert fb == expect, (fb, expect)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="x", shape="train_4k", mesh="single", chips=256,
+                 hlo_flops_per_chip=197e12,          # exactly 1s compute
+                 hlo_bytes_per_chip=819e9 * 2,       # 2s raw memory
+                 collective_bytes_per_chip=50e9 * 3,  # 3s collective
+                 model_flops_global=197e12 * 256 * 0.5,
+                 fused_bytes_per_chip=819e9 * 0.5)   # fused: 0.5s
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)          # uses fused
+    assert r.memory_upper_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(3.0)
+    assert r.bottleneck == "collective"
+    assert r.step_time_s == pytest.approx(3.0)
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    assert r.mfu == pytest.approx(0.5 / 3.0)

@@ -1,0 +1,181 @@
+"""Tests for optimizer, data pipeline, checkpointing, fault tolerance."""
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import AdamW, cosine_schedule
+from repro.data import (PrefetchIterator, SyntheticTokenStream,
+                        TokenStreamConfig)
+from repro.checkpoint import (AsyncCheckpointer, latest_step, restore, save,
+                              gc_old_checkpoints)
+from repro.runtime import ResilientLoop, StragglerMonitor, degrade_topology
+
+
+# ------------------------------------------------------------------ optim
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0]), "b": jnp.asarray(2.0)}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    for _ in range(300):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_grad_clip():
+    opt = AdamW(lr=1.0, grad_clip=1e-6, weight_decay=0.0)
+    params = {"w": jnp.ones(4)}
+    state = opt.init(params)
+    huge = {"w": jnp.full(4, 1e9)}
+    new, _ = opt.update(huge, state, params)
+    # clipped: update magnitude bounded by lr regardless of grad scale
+    assert float(jnp.max(jnp.abs(new["w"] - params["w"]))) <= 1.5
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.asarray(100))) <= 0.11
+    assert float(lr(jnp.asarray(5))) == pytest.approx(0.5)
+
+
+# ------------------------------------------------------------------- data
+def test_stream_deterministic_and_seekable():
+    cfg = TokenStreamConfig(vocab=101, seq_len=16, global_batch=4, seed=7)
+    a = iter(SyntheticTokenStream(cfg))
+    b1, b2 = next(a), next(a)
+    s2 = SyntheticTokenStream(cfg)
+    s2.seek(1)
+    b2b = next(iter(s2))
+    np.testing.assert_array_equal(b2["tokens"], b2b["tokens"])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 16)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_stream_host_sharding_partitions_batch():
+    full = TokenStreamConfig(vocab=50, seq_len=8, global_batch=4, seed=1)
+    h0 = TokenStreamConfig(vocab=50, seq_len=8, global_batch=4, seed=1,
+                           n_hosts=2, host_id=0)
+    b = next(iter(SyntheticTokenStream(h0)))
+    assert b["tokens"].shape == (2, 8)
+
+
+def test_stream_is_learnable():
+    """The markov process must have structure (not uniform random)."""
+    cfg = TokenStreamConfig(vocab=64, seq_len=256, global_batch=8, seed=0)
+    b = next(iter(SyntheticTokenStream(cfg)))
+    t, l = b["tokens"], b["labels"]
+    # given (prev state recurrence), labels are deterministic 75% of the time;
+    # check repeated-context predictability: same (t) pair -> same label often
+    state = (t[:, :-1] * 31 + t[:, 1:] * 0 + 0)  # cheap proxy: just entropy
+    _, counts = np.unique(l, return_counts=True)
+    p = counts / counts.sum()
+    ent = -(p * np.log(p)).sum()
+    assert ent < np.log(64) * 0.995
+
+
+def test_prefetch_iterator_order():
+    it = PrefetchIterator(iter(range(50)), depth=4)
+    assert list(it) == list(range(50))
+
+
+# ------------------------------------------------------------- checkpoint
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.standard_normal((4, 3)),
+                                        jnp.float32),
+                       "b": jnp.asarray(rng.standard_normal(3), jnp.float32)},
+            "step_count": jnp.asarray(17, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    save(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    got, step = restore(str(tmp_path), jax.tree.map(jnp.zeros_like, tree))
+    assert step == 5
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), got, tree)
+
+
+def test_checkpoint_atomic_commit(tmp_path):
+    # a dir without _COMPLETE must be ignored by latest_step
+    tree = _tree()
+    save(str(tmp_path), 3, tree)
+    os.makedirs(tmp_path / "step_00000009", exist_ok=True)
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save_async(s, _tree(s))
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 4
+    steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert len(steps) == 2
+
+
+def test_elastic_restore_reshards(tmp_path):
+    """Restore with a shard_fn placing arrays on the current device."""
+    tree = _tree()
+    save(str(tmp_path), 1, tree)
+    dev = jax.devices()[0]
+    got, _ = restore(str(tmp_path), tree,
+                     shard_fn=lambda k, a: jax.device_put(a, dev))
+    assert all(d.devices() == {dev} for d in jax.tree.leaves(got)
+               if hasattr(d, "devices"))
+
+
+# --------------------------------------------------------- fault tolerance
+def test_resilient_loop_crash_restart(tmp_path):
+    """Crash mid-run, restart, final state identical to an uninterrupted run."""
+    def make_step():
+        def step_fn(state, step):
+            return {"x": state["x"] + step, "data_step": step + 1}
+        return step_fn
+
+    # uninterrupted reference
+    ref = {"x": jnp.asarray(0.0), "data_step": 0}
+    for s in range(30):
+        ref = make_step()(ref, s)
+
+    loop = ResilientLoop(str(tmp_path / "ck"), ckpt_every=5)
+    state = {"x": jnp.asarray(0.0), "data_step": 0}
+    with pytest.raises(RuntimeError):
+        def crashing(state, step):
+            if step == 17:
+                raise RuntimeError("node failure")
+            return make_step()(state, step)
+        loop.run(state, 0, 30, crashing)
+
+    # restart from last checkpoint
+    loop2 = ResilientLoop(str(tmp_path / "ck"), ckpt_every=5)
+    state2, start = loop2.resume_or_init(
+        lambda: {"x": jnp.asarray(0.0), "data_step": 0})
+    assert start == 15
+    state2 = loop2.run(state2, start, 30, make_step())
+    assert float(state2["x"]) == float(ref["x"])
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(threshold=3.0)
+    for i in range(10):
+        assert not mon.record(i, 0.1)
+    assert mon.record(10, 1.0)          # 10x slower -> straggler
+    assert mon.events[0]["step"] == 10
+    assert not mon.record(11, 0.1)      # ewma not polluted by the outlier
+
+
+def test_degraded_topology_still_mixes():
+    from repro.core import erdos_renyi, validate_mixing
+    topo = erdos_renyi(12, p=0.5, seed=0)
+    degraded = degrade_topology(topo.mixing, dead=[3, 7])
+    assert degraded.m == 10
+    validate_mixing(degraded.mixing)
+    assert degraded.spectral_gap > 0.0
