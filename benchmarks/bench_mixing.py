@@ -1,22 +1,57 @@
-"""Proposition 1 validation: FastMix vs naive gossip contraction rates,
-measured vs theoretical, across topologies (incl. the TPU-native torus)."""
+"""FastMix benchmarks: Prop. 1 validation + ConsensusEngine backend sweep.
+
+Two entry points:
+
+* :func:`main` (used by ``benchmarks.run``) — FastMix vs naive gossip
+  contraction rates, measured vs theoretical, across topologies.
+* :func:`sweep_backends` (``python benchmarks/bench_mixing.py --sweep``) —
+  times the engine's three gossip backends (per-round ``stacked``, fused
+  ``pallas`` kernel/polynomial, ``shard_map`` collectives) over an
+  (m, d, k, K) grid and emits a comparison table with the fused-vs-stacked
+  speedup per config.  Run with ``--sweep`` so fake host devices are set up
+  before jax initialises and the shard_map rows can execute on CPU.
+"""
 from __future__ import annotations
 
 import csv
+import os
 import sys
+
+if __name__ == "__main__" and "--sweep" in sys.argv:
+    # must happen before the first jax backend initialisation; append so a
+    # pre-existing XLA_FLAGS doesn't silently drop the fake devices (an
+    # explicit --xla_force_host_platform_device_count in it still wins)
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=16").strip()
+
 import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core import (complete, consensus_error, erdos_renyi, fastmix,
-                        fastmix_eta, hypercube, naive_mix, ring, torus2d)
+from repro.core import (ConsensusEngine, complete, consensus_error,
+                        erdos_renyi, fastmix, fastmix_eta, hypercube,
+                        naive_mix, ring, torus2d)
 
 TOPOLOGIES = [
     ("er50_p0.5", lambda: erdos_renyi(50, p=0.5, seed=0)),   # paper setting
     ("ring16", lambda: ring(16)),
     ("torus16x16", lambda: torus2d(16, 16)),                 # TPU pod fabric
     ("hypercube256", lambda: hypercube(256)),
+]
+
+# (m, d, k, K) grid for the backend sweep; the (16, 1024, 8, 8) point is the
+# acceptance config tracked in CHANGES.md / the PR table.
+SWEEP_CONFIGS = [
+    (8, 256, 8, 4),
+    (8, 1024, 8, 8),
+    (16, 256, 8, 4),
+    (16, 1024, 8, 4),
+    (16, 1024, 8, 8),
+    (16, 4096, 8, 8),
 ]
 
 
@@ -47,5 +82,90 @@ def main(writer=None) -> None:
                 f"gap={topo.spectral_gap:.4f}"])
 
 
+# ---------------------------------------------------------- backend sweep
+
+def _median_us(fn, reps: int = 100) -> float:
+    fn().block_until_ready()                  # compile + warm cache
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def _backend_fns(topo, S, K):
+    """Per-backend jitted mix closures for one config (None = unavailable)."""
+    m = topo.m
+    fns = {}
+    eng_s = ConsensusEngine(topo, K=K, backend="stacked")
+    fns["stacked"] = ("per-round einsum", lambda: eng_s.mix(S))
+
+    eng_p = ConsensusEngine(topo, K=K, backend="pallas")
+    flavour = ("pallas kernel" if jax.default_backend() == "tpu"
+               else "poly fallback")
+    fns["pallas-fused"] = (flavour, lambda: eng_p.mix(S))
+
+    if len(jax.devices()) >= m:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.asarray(jax.devices()[:m]), ("agents",))
+        eng_d = ConsensusEngine(topo, K=K, backend="shard_map", mesh=mesh)
+        fns["shard_map"] = ("collective_permute", lambda: eng_d.mix(S))
+    else:
+        fns["shard_map"] = (f"skipped ({len(jax.devices())} devices < {m})",
+                            None)
+    return fns
+
+
+def sweep_backends(writer=None, configs=SWEEP_CONFIGS, reps: int = 100,
+                   markdown: bool = False):
+    """Time every gossip backend over the (m, d, k, K) grid."""
+    own = writer is None
+    if own and not markdown:
+        writer = csv.writer(sys.stdout)
+        writer.writerow(["name", "us_per_call", "derived"])
+    rows = []
+    rng = np.random.default_rng(0)
+    for (m, d, k, K) in configs:
+        topo = ring(m)
+        S = jnp.asarray(rng.standard_normal((m, d, k)), jnp.float32)
+        fns = _backend_fns(topo, S, K)
+        timings = {}
+        for backend, (flavour, fn) in fns.items():
+            us = _median_us(fn, reps) if fn is not None else float("nan")
+            timings[backend] = (flavour, us)
+            if writer is not None:
+                writer.writerow([
+                    f"mixing_backend/{topo.name}/d{d}k{k}K{K}/{backend}",
+                    f"{us:.1f}", flavour])
+        speedup = timings["stacked"][1] / timings["pallas-fused"][1]
+        rows.append(((m, d, k, K), timings, speedup))
+    if markdown:
+        _print_markdown(rows)
+    return rows
+
+
+def _print_markdown(rows) -> None:
+    host = jax.default_backend()
+    print(f"\n### FastMix backend sweep (host backend: {host}, "
+          f"{len(jax.devices())} devices, ring topology)\n")
+    print("| m | d | k | K | stacked (per-round) | pallas-fused | "
+          "shard_map | fused speedup |")
+    print("|---|---|---|---|---------------------|--------------|"
+          "-----------|---------------|")
+    for (m, d, k, K), t, speedup in rows:
+        def cell(b):
+            flavour, us = t[b]
+            if us != us:                      # NaN -> unavailable
+                return flavour
+            return f"{us:.0f} µs ({flavour})"
+        print(f"| {m} | {d} | {k} | {K} | {cell('stacked')} | "
+              f"{cell('pallas-fused')} | {cell('shard_map')} | "
+              f"**{speedup:.2f}×** |")
+
+
 if __name__ == "__main__":
-    main()
+    if "--sweep" in sys.argv:
+        sweep_backends(writer=None, markdown=True)
+    else:
+        main()

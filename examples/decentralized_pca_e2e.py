@@ -54,25 +54,22 @@ def main() -> None:
     rng = np.random.default_rng(1)
     W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((args.d, args.k)))[0])
 
-    start = 0
-    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        (W0_saved,), start = restore(args.ckpt_dir, (np.asarray(W0),))
-        print(f"[resume] from checkpointed subspace at block {start}")
-        W0 = jnp.asarray(W0_saved)
-
     # run in blocks of 20 power iterations; the full DeEPCA state
     # (S, W, G_prev) is carried across blocks — and checkpointed, so a crash
-    # resumes mid-algorithm with zero lost progress.
-    t0 = time.time()
-    done = start * 20
+    # resumes mid-algorithm with zero lost progress.  (W0 itself is
+    # deterministic from the seed, so only the state tuple is checkpointed.)
+    start = 0
     state = None
     W_run = W0
-    if args.ckpt_dir and start > 0:
-        tmpl = tuple(np.zeros((args.m, args.d, args.k))) * 3
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         (state,), start = restore(
             args.ckpt_dir,
             ((np.zeros((args.m, args.d, args.k)),) * 3,))
         state = tuple(jnp.asarray(s) for s in state)
+        W_run = jnp.linalg.qr(jnp.mean(state[1], axis=0))[0]
+        print(f"[resume] from checkpointed DeEPCA state at block {start}")
+    t0 = time.time()
+    done = start * 20
     for block in range(start, (T + 19) // 20):
         res = deepca(ops, topo, W_run, k=args.k, T=20, K=K, U=U, state=state)
         state = res.state

@@ -1,7 +1,8 @@
 """DeEPCA core: the paper's contribution as composable JAX modules."""
 from .topology import (Topology, ring, torus2d, hypercube, complete,
                        erdos_renyi, make_topology, validate_mixing)
-from .mixing import fastmix, naive_mix, fastmix_eta, consensus_error, mixer
+from .mixing import fastmix, naive_mix, fastmix_eta, consensus_error
+from .consensus import ConsensusEngine, resolve_backend, BACKENDS, VARIANTS
 from .operators import (StackedOperators, synthetic_spiked, libsvm_like,
                         top_k_eigvecs)
 from .algorithms import (deepca, depca, centralized_power_method, sign_adjust,
@@ -13,7 +14,8 @@ from . import metrics
 __all__ = [
     "Topology", "ring", "torus2d", "hypercube", "complete", "erdos_renyi",
     "make_topology", "validate_mixing",
-    "fastmix", "naive_mix", "fastmix_eta", "consensus_error", "mixer",
+    "fastmix", "naive_mix", "fastmix_eta", "consensus_error",
+    "ConsensusEngine", "resolve_backend", "BACKENDS", "VARIANTS",
     "StackedOperators", "synthetic_spiked", "libsvm_like", "top_k_eigvecs",
     "deepca", "depca", "centralized_power_method", "sign_adjust",
     "DecentralizedPCAResult", "PowerTrace", "theory_consensus_rounds",

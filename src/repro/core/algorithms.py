@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import metrics
-from .mixing import consensus_error, fastmix, fastmix_eta, naive_mix
+from .consensus import ConsensusEngine
+from .mixing import consensus_error
 from .operators import StackedOperators, top_k_eigvecs
 from .topology import Topology
 
@@ -80,8 +81,10 @@ def _make_trace(ops: StackedOperators, U: jax.Array,
 
 def deepca(ops: StackedOperators, topology: Topology, W0: jax.Array, *,
            k: int, T: int, K: int, U: Optional[jax.Array] = None,
-           accelerate: bool = True,
-           state: Optional[tuple] = None) -> DecentralizedPCAResult:
+           accelerate: bool = True, state: Optional[tuple] = None,
+           backend: str = "auto",
+           engine: Optional[ConsensusEngine] = None
+           ) -> DecentralizedPCAResult:
     """Alg. 1 — Decentralized Exact PCA with subspace tracking.
 
     Args:
@@ -93,23 +96,32 @@ def deepca(ops: StackedOperators, topology: Topology, W0: jax.Array, *,
          (the paper's headline property, Thm. 1 / Eqn. 3.11).
       U: optional ground-truth top-k eigenvectors for diagnostics.
       accelerate: FastMix (True) or naive gossip (False) consensus.
+      backend: ConsensusEngine backend (``auto``/``stacked``/``pallas``/
+         ``shard_map``; see :mod:`repro.core.consensus` selection rules).
+      engine: pre-built engine; overrides topology/K/accelerate/backend.
     """
     m, d = ops.m, ops.d
-    L = jnp.asarray(topology.mixing, dtype=W0.dtype)
-    eta = fastmix_eta(topology.lambda2)
     if U is None:
         U, _ = top_k_eigvecs(ops.mean_matrix(), k)
 
+    # run the iteration in the dtype ops.apply will promote to, so the scan
+    # carry is type-stable even for a low-precision W0 (e.g. bf16 + f32 data)
+    dt = jnp.result_type(W0.dtype, ops.dtype)
+
     if state is not None:
-        S, W_stack, G_prev = state     # resume (checkpoint/restart support)
+        # resume (checkpoint/restart support); same dtype cast as the fresh
+        # start so a low-precision checkpoint doesn't break the scan carry
+        S, W_stack, G_prev = (x.astype(dt) for x in state)
     else:
-        W_stack = jnp.broadcast_to(W0, (m, d, k))
+        W_stack = jnp.broadcast_to(W0, (m, d, k)).astype(dt)
         # Alg. 1 line 2: S_j^0 = W^0 and A_j W_j^{-1} := W^0, i.e. G^0 := W^0.
         S = W_stack
         G_prev = W_stack
 
-    mix = (lambda X: fastmix(X, L, eta, K)) if accelerate \
-        else (lambda X: naive_mix(X, L, K))
+    if engine is None:
+        engine = ConsensusEngine.for_algorithm(
+            "deepca", topology, K=K, backend=backend, accelerate=accelerate)
+    mix = engine.mix
 
     def step(carry, _):
         S, W, G_prev = carry
@@ -130,27 +142,33 @@ def deepca(ops: StackedOperators, topology: Topology, W0: jax.Array, *,
 
 def depca(ops: StackedOperators, topology: Topology, W0: jax.Array, *,
           k: int, T: int, K: int, U: Optional[jax.Array] = None,
-          accelerate: bool = True,
-          increasing_consensus: bool = False) -> DecentralizedPCAResult:
+          accelerate: bool = True, increasing_consensus: bool = False,
+          backend: str = "auto",
+          engine: Optional[ConsensusEngine] = None
+          ) -> DecentralizedPCAResult:
     """Baseline decentralized power method (Eqn. 3.4; Wai et al. 2017).
 
     Each power iteration: local step W_j <- A_j W_j, multi-consensus, QR.
     Without subspace tracking the consensus error floors at a level set by
     data heterogeneity, so K must grow with 1/eps (Eqn. 3.12).  With
     ``increasing_consensus=True`` we emulate the practical fix of growing the
-    round count: iteration t uses ``K + t`` rounds (unrolled python loop).
+    round count: iteration t uses ``K + t`` rounds (the ConsensusEngine's
+    per-call ``rounds`` override, unrolled python loop).
     """
     m, d = ops.m, ops.d
-    L = jnp.asarray(topology.mixing, dtype=W0.dtype)
-    eta = fastmix_eta(topology.lambda2)
     if U is None:
         U, _ = top_k_eigvecs(ops.mean_matrix(), k)
 
-    W_stack = jnp.broadcast_to(W0, (m, d, k))
+    if engine is None:
+        engine = ConsensusEngine.for_algorithm(
+            "depca", topology, K=K, backend=backend, accelerate=accelerate)
+
+    dt = jnp.result_type(W0.dtype, ops.dtype)
+    W_stack = jnp.broadcast_to(W0, (m, d, k)).astype(dt)
 
     def one_iter(W_stack, rounds: int):
         G = ops.apply(W_stack)
-        G = fastmix(G, L, eta, rounds) if accelerate else naive_mix(G, L, rounds)
+        G = engine.mix(G, rounds=rounds)
         W_new = _qr_orth(G)
         W_new = sign_adjust(W_new, W0)
         return G, W_new

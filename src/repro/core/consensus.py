@@ -1,0 +1,245 @@
+"""ConsensusEngine: one gossip subsystem, three pluggable backends.
+
+Before this module, FastMix existed in three divergent forms — the stacked
+einsum loop (:mod:`repro.core.mixing`), the ``shard_map`` collectives
+(:mod:`repro.core.gossip_shard`), and the K-unrolled local loop
+(:func:`repro.core.gossip_shard.fastmix_local`) — each hand-wired into its
+caller.  The engine puts them behind one object that
+:func:`repro.core.algorithms.deepca`/:func:`~repro.core.algorithms.depca`,
+:class:`repro.core.gossip_shard.DistributedDeEPCA` and
+:func:`repro.launch.steps.make_train_step_compressed` all consume, and is
+the seam later scaling work (async gossip, time-varying topologies,
+multi-mesh) plugs into.
+
+Backends
+--------
+``stacked``
+    Per-round dense mixing ``einsum('ij,j...->i...')`` on the agent-major
+    array.  The bit-reference all other backends are property-tested
+    against.
+``pallas``
+    Fused execution: **one** launch runs all K Chebyshev rounds.  On TPU
+    (or with ``interpret=True`` anywhere) this is the Pallas kernel
+    :func:`repro.kernels.fastmix.fastmix_fused`, which keeps both iterate
+    buffers resident in VMEM across rounds instead of making K HBM
+    round-trips.  On hosts where the kernel cannot compile it lowers to the
+    algebraically fused :func:`repro.kernels.fastmix.fastmix_poly`
+    (``S_out = P_K(L) S`` — one pass over the iterate).
+``shard_map``
+    Device-distributed gossip: agents live on devices along a named mesh
+    axis; ring/hypercube topologies lower to ``collective_permute``
+    (nearest-neighbour ICI traffic only), dense ones to one ``all_gather``
+    per round.
+
+Backend-selection rules (``backend="auto"``)
+--------------------------------------------
+* TPU default backend  -> ``pallas`` (the fused kernel is the hot path);
+* anything else        -> ``stacked`` (the reference path; the fused
+  fallback changes fp round-off, so off-TPU it is opt-in).
+* ``shard_map`` is **never** auto-selected: it requires a mesh whose
+  ``axis`` has exactly ``topology.m`` devices.  Pass it explicitly (or a
+  ``mesh``) when you have one.
+
+Variants
+--------
+``fastmix``  Chebyshev-accelerated gossip (Prop. 1; the DeEPCA default).
+``naive``    plain gossip ``S <- L S`` (the DePCA / Xiao-Boyd baseline);
+             internally just ``eta = 0``, so every backend supports it.
+:meth:`ConsensusEngine.for_algorithm` encodes the deepca/depca mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .mixing import fastmix, fastmix_eta, naive_mix
+from .topology import Topology
+
+BACKENDS = ("auto", "stacked", "pallas", "shard_map")
+VARIANTS = ("fastmix", "naive")
+
+#: Default mesh-axis name for the shard_map backend.
+AXIS = "agents"
+
+
+def resolve_backend(backend: str) -> str:
+    """Apply the module-level selection rules; returns a concrete backend."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "stacked"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusEngine:
+    """Gossip consensus over a fixed topology with a pluggable backend.
+
+    Attributes:
+      topology: gossip graph; its mixing matrix drives every backend.
+      K: default number of gossip rounds per :meth:`mix` call.
+      backend: gossip backend; ``"auto"`` is resolved to a concrete choice
+        at construction, so after ``__init__`` this always reads
+        ``stacked``/``pallas``/``shard_map``.
+      variant: ``"fastmix"`` (Chebyshev momentum) or ``"naive"`` (eta=0).
+      mesh: optional ``jax.sharding.Mesh`` for the shard_map backend; when
+        absent one is built on demand from ``jax.devices()`` (which must
+        then have exactly ``topology.m`` devices).
+      axis: mesh-axis name the shard_map backend gossips along.
+      interpret: Pallas interpret-mode override for the pallas backend —
+        ``None``/``False`` pick the real kernel on TPU and the fused
+        polynomial fallback elsewhere; ``True`` forces the kernel in
+        interpret mode on any host (used by the cross-backend parity
+        tests).
+    """
+
+    topology: Topology
+    K: int
+    backend: str = "auto"
+    variant: str = "fastmix"
+    mesh: Optional[object] = None
+    axis: str = AXIS
+    interpret: Optional[bool] = None
+    block_n: int = 512
+    # per-rounds cache of jitted shard_map mix fns (jax's dispatch cache is
+    # keyed on function identity, so rebuilding the closure per call would
+    # re-trace every time)
+    _sharded_mix_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
+    # per-dtype cache of the device-resident mixing matrix, so eager hot
+    # loops don't re-upload the (m, m) array on every mix() call
+    _L_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(
+                f"variant must be one of {VARIANTS}, got {self.variant!r}")
+        object.__setattr__(self, "backend", resolve_backend(self.backend))
+
+    # ------------------------------------------------------------- scalars
+    @property
+    def eta(self) -> float:
+        """Chebyshev momentum; 0.0 degenerates every backend to naive gossip."""
+        if self.variant == "naive":
+            return 0.0
+        return fastmix_eta(self.topology.lambda2)
+
+    @property
+    def mixing_matrix(self) -> jax.Array:
+        return self._L(jnp.float32)
+
+    def _L(self, dtype) -> jax.Array:
+        key = jnp.dtype(dtype).name
+        arr = self._L_cache.get(key)
+        if arr is None:
+            arr = jnp.asarray(self.topology.mixing, dtype=dtype)
+            self._L_cache[key] = arr
+        return arr
+
+    def contraction_rate(self, rounds: Optional[int] = None) -> float:
+        """Prop. 1 bound for this variant after ``rounds`` gossip rounds."""
+        r = self.K if rounds is None else rounds
+        if self.variant == "naive":
+            return self.topology.naive_rate(r)
+        return self.topology.fastmix_rate(r)
+
+    # ------------------------------------------------- stacked-form mixing
+    def mix(self, S: jax.Array, rounds: Optional[int] = None) -> jax.Array:
+        """Mix stacked ``(m, ...)`` agent variables; preserves the mean.
+
+        ``rounds`` overrides the engine default K (static per call — this
+        is what DePCA's increasing-consensus schedule uses).
+        """
+        r = self.K if rounds is None else int(rounds)
+        if r <= 0:
+            return S
+        if S.shape[0] != self.topology.m:
+            raise ValueError(
+                f"leading (agent) axis {S.shape[0]} != topology m="
+                f"{self.topology.m}")
+        if self.backend == "stacked":
+            L = self._L(S.dtype)
+            if self.variant == "naive":
+                return naive_mix(S, L, r)
+            return fastmix(S, L, self.eta, r)
+        if self.backend == "pallas":
+            return self._mix_fused(S, r)
+        return self._mix_shard_map(S, r)
+
+    def _mix_fused(self, S: jax.Array, rounds: int) -> jax.Array:
+        # fp32 accumulation in both fused paths; cast back so the engine
+        # preserves the caller's dtype like the stacked reference does.
+        # Exception: f64 iterates (x64 workloads chasing <1e-8 targets) must
+        # not round-trip through fp32, so they take the polynomial path in
+        # full f64 — still fused, no precision cliff.
+        from repro.kernels import fastmix as _fm
+        if S.dtype == jnp.float64:
+            return _fm.fastmix_poly(S, self._L(jnp.float64), self.eta, rounds)
+        L = self._L(jnp.float32)
+        use_kernel = (self.interpret is True
+                      or jax.default_backend() == "tpu")
+        if use_kernel:
+            out = _fm.fastmix_fused(
+                S, L, float(self.eta), rounds, block_n=self.block_n,
+                interpret=self.interpret is True)
+            return out.astype(S.dtype)
+        return _fm.fastmix_poly(S, L, self.eta, rounds).astype(S.dtype)
+
+    def _mix_shard_map(self, S: jax.Array, rounds: int) -> jax.Array:
+        fn = self._sharded_mix_cache.get(rounds)
+        if fn is None:
+            from repro.runtime.compat import shard_map
+            from jax.sharding import Mesh, PartitionSpec as P
+            import numpy as np
+            mesh = self.mesh
+            if mesh is None:
+                devs = jax.devices()
+                if len(devs) != self.topology.m:
+                    raise ValueError(
+                        f"shard_map backend needs a mesh with "
+                        f"{self.topology.m} devices along {self.axis!r}; "
+                        f"have {len(devs)} devices and no mesh was supplied")
+                mesh = Mesh(np.asarray(devs), (self.axis,))
+            fn = jax.jit(shard_map(
+                lambda x: self.local_mix(x, axis=self.axis, rounds=rounds),
+                mesh=mesh, in_specs=P(self.axis), out_specs=P(self.axis),
+                check_vma=False))
+            self._sharded_mix_cache[rounds] = fn
+        return fn(S)
+
+    # -------------------------------------------- in-shard_map local mixing
+    def local_round_fn(self, axis: Optional[str] = None
+                       ) -> Callable[[jax.Array], jax.Array]:
+        """One gossip round for a local ``(1, d, k)`` slice (inside shard_map)."""
+        from .gossip_shard import make_round_fn
+        return make_round_fn(self.topology, axis or self.axis)
+
+    def local_mix(self, x: jax.Array, axis: Optional[str] = None,
+                  rounds: Optional[int] = None) -> jax.Array:
+        """Full K-round gossip on a local slice; call *inside* shard_map."""
+        from .gossip_shard import fastmix_local
+        r = self.K if rounds is None else int(rounds)
+        return fastmix_local(x, self.local_round_fn(axis), self.eta, r)
+
+    # -------------------------------------------------------- construction
+    @classmethod
+    def for_algorithm(cls, algorithm: str, topology: Topology, K: int, *,
+                      backend: str = "auto", accelerate: bool = True,
+                      **kw) -> "ConsensusEngine":
+        """The deepca/depca variant selector.
+
+        ``deepca`` and ``depca`` both gossip with FastMix when
+        ``accelerate`` (the paper's setting) and plain gossip otherwise;
+        DePCA's increasing-consensus schedule is expressed through the
+        per-call ``rounds`` override of :meth:`mix`.  Centralising the
+        mapping here keeps every algorithm entry point on the same engine.
+        """
+        if algorithm not in ("deepca", "depca"):
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        variant = "fastmix" if accelerate else "naive"
+        return cls(topology=topology, K=K, backend=backend, variant=variant,
+                   **kw)

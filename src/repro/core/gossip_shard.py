@@ -9,6 +9,9 @@ mixing matrix (the paper's Erdős–Rényi setting).
 
 The semantics are bit-identical to the stacked simulator in
 :mod:`repro.core.algorithms` (property-tested in tests/test_distributed.py).
+This module is the ``shard_map`` backend of
+:class:`repro.core.consensus.ConsensusEngine`; ``shard_map`` itself comes
+from :mod:`repro.runtime.compat` so the code runs on every jax version.
 """
 from __future__ import annotations
 
@@ -18,12 +21,12 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.runtime.compat import shard_map
 
 from .algorithms import sign_adjust
-from .mixing import fastmix_eta
+from .consensus import ConsensusEngine
 from .topology import Topology
 
 AXIS = "agents"
@@ -62,11 +65,15 @@ def make_round_fn(topology: Topology, axis: str = AXIS
     m = topology.m
     name = topology.name
     if name.startswith("ring"):
-        lam_max = 2.0 - 2.0 * np.cos(np.pi * (2 * ((m - 1) // 2)) / m) \
-            if m > 2 else 2.0
-        # use exact weights from the mixing matrix instead of re-deriving:
+        # exact weights read straight from the mixing matrix:
         self_w = float(topology.mixing[0, 0])
         nb_w = float(topology.mixing[0, 1])
+        if m == 2:
+            # fwd and bwd shifts deliver the SAME single neighbour (the
+            # adjacency is edge-clamped), so use one permute or the
+            # contribution is double-counted vs the mixing-matrix row
+            return lambda x: self_w * x + nb_w * jax.lax.ppermute(
+                x, axis, [(0, 1), (1, 0)])
         return lambda x: _ring_round(x, m, axis, self_w, nb_w)
     if name.startswith("hypercube"):
         return lambda x: _hypercube_round(x, m, axis)
@@ -90,6 +97,11 @@ def fastmix_local(x: jax.Array, round_fn, eta: float, K: int) -> jax.Array:
 class DistributedDeEPCA:
     """DeEPCA where each mesh device along ``axis`` is one agent.
 
+    Gossip is delegated to a :class:`~repro.core.consensus.ConsensusEngine`
+    (shard_map backend) so this runtime, the stacked simulator and the
+    compressed trainer all share one consensus implementation; pass
+    ``engine=`` to override (e.g. a ``variant="naive"`` baseline).
+
     Usage::
 
         dd = DistributedDeEPCA(mesh, topology, k=8, K=6, T=30)
@@ -102,14 +114,17 @@ class DistributedDeEPCA:
     K: int
     T: int
     axis: str = AXIS
+    engine: Optional[ConsensusEngine] = None
 
     def __post_init__(self):
         if self.mesh.shape[self.axis] != self.topology.m:
             raise ValueError(
                 f"mesh axis {self.axis}={self.mesh.shape[self.axis]} must equal "
                 f"topology size m={self.topology.m}")
-        self._eta = fastmix_eta(self.topology.lambda2)
-        self._round = make_round_fn(self.topology, self.axis)
+        if self.engine is None:
+            self.engine = ConsensusEngine.for_algorithm(
+                "deepca", self.topology, K=self.K, backend="shard_map",
+                mesh=self.mesh, axis=self.axis)
 
     # -- one full power iteration on local slices -------------------------
     def _local_step(self, A, S, W, G_prev, W0):
@@ -120,7 +135,7 @@ class DistributedDeEPCA:
             XW = jnp.einsum("mnd,mdk->mnk", A, W)
             G = jnp.einsum("mnd,mnk->mdk", A, XW)
         S_new = S + G - G_prev                      # subspace tracking
-        S_new = fastmix_local(S_new, self._round, self._eta, self.K)
+        S_new = self.engine.local_mix(S_new, axis=self.axis)
         q, _ = jnp.linalg.qr(S_new[0])
         W_new = sign_adjust(q, W0)[None]
         return S_new, W_new, G

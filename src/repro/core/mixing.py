@@ -10,6 +10,12 @@ Two execution forms are provided:
   torus mixing lowers to `collective_permute` (nearest-neighbour ICI traffic
   only).
 
+Callers should normally go through :class:`repro.core.consensus
+.ConsensusEngine`, which fronts these primitives (plus the fused Pallas
+kernel in :mod:`repro.kernels.fastmix`) behind one backend-pluggable
+interface; this module remains the per-round stacked reference the other
+backends are property-tested against.
+
 FastMix recursion (Liu & Morse 2011), Proposition 1 of the paper::
 
     eta = (1 - sqrt(1 - lambda2^2)) / (1 + sqrt(1 - lambda2^2))
@@ -81,12 +87,3 @@ def consensus_error(S: jax.Array) -> jax.Array:
 
 def agent_mean(S: jax.Array) -> jax.Array:
     return jnp.mean(S, axis=0)
-
-
-def mixer(topology: Topology, K: int, accelerate: bool = True):
-    """Returns ``mix(S) -> S`` closing over a topology (stacked form)."""
-    L = jnp.asarray(topology.mixing, dtype=jnp.float32)
-    eta = fastmix_eta(topology.lambda2)
-    if accelerate:
-        return lambda S: fastmix(S, L, eta, K)
-    return lambda S: naive_mix(S, L, K)

@@ -32,14 +32,22 @@ class StackedOperators:
             raise ValueError("exactly one of dense/data must be given")
 
     @property
+    def array(self) -> jax.Array:
+        """Whichever representation is set (the single source of truth)."""
+        return self.dense if self.dense is not None else self.data
+
+    @property
     def m(self) -> int:
-        arr = self.dense if self.dense is not None else self.data
-        return arr.shape[0]
+        return self.array.shape[0]
 
     @property
     def d(self) -> int:
-        arr = self.dense if self.dense is not None else self.data
-        return arr.shape[-1]
+        return self.array.shape[-1]
+
+    @property
+    def dtype(self):
+        """dtype :meth:`apply` promotes to (with a same-dtype operand)."""
+        return self.array.dtype
 
     def apply(self, W: jax.Array) -> jax.Array:
         """Stacked power step: returns (m, d, k) with slice_j = A_j W_j."""

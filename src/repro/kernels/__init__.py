@@ -1,3 +1,4 @@
 """Pallas TPU kernels for the paper's compute hot spots (+ jnp oracles)."""
 from . import ops, ref
-from .ops import gram, power_matmul, flash_attention
+from .ops import gram, power_matmul, flash_attention, fastmix_fused
+from .fastmix import fastmix_poly

@@ -1,0 +1,129 @@
+"""Fused Pallas TPU kernel for FastMix (Alg. 3): K Chebyshev rounds, 1 launch.
+
+FastMix is the communication hot loop of every DeEPCA power iteration::
+
+    S^{k+1} = (1 + eta) * L S^k - eta * S^{k-1}
+
+The per-round stacked implementation (:func:`repro.core.mixing.fastmix`)
+materialises each ``S^k`` in HBM — K launches, 2K HBM round-trips of the
+``(m, d*k)`` iterate.  Because every *column* of the stacked iterate evolves
+independently under the recursion (the mixing acts only on the agent axis),
+the whole K-round loop can be fused: this kernel tiles the column axis,
+keeps the ``(m, m)`` mixing matrix and **both iterate buffers resident in
+VMEM across all K rounds**, and writes each output tile exactly once.
+Arithmetic is fp32 on the MXU regardless of input dtype.
+
+Two fused execution paths are exposed (the ConsensusEngine picks one):
+
+* :func:`fastmix_fused` — the Pallas kernel (TPU, or ``interpret=True``
+  anywhere for testing).
+* :func:`fastmix_poly` — algebraic fusion for hosts without a TPU: the
+  recursion is linear in ``S``, so ``S_out = P_K(L) S`` where ``P_K`` is the
+  degree-K Chebyshev-like polynomial of the ``(m, m)`` mixing matrix.
+  ``P_K(L)`` is built with K tiny ``(m, m)`` matmuls, then applied with ONE
+  pass over the iterate — the same single-HBM-trip structure as the kernel.
+
+Both agree with the per-round reference to fp32 round-off (property-tested
+in tests/test_consensus.py) and both preserve the agent mean exactly in
+exact arithmetic (``L`` is doubly stochastic, and the recursion's
+coefficients sum to one).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _fastmix_kernel(l_ref, x_ref, o_ref, *, eta: float, K: int):
+    """One column tile: run all K rounds with prev/cur resident in VMEM."""
+    L = l_ref[...]
+    prev = x_ref[...].astype(jnp.float32)
+    cur = prev
+    for _ in range(K):      # K is small and static: unrolled, no HBM traffic
+        mixed = jax.lax.dot_general(
+            L, cur, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        prev, cur = cur, (1.0 + eta) * mixed - eta * prev
+    o_ref[...] = cur
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eta", "K", "block_n", "interpret"))
+def fastmix_fused(S: jax.Array, L: jax.Array, eta: float, K: int, *,
+                  block_n: int = 512, interpret: bool = False) -> jax.Array:
+    """All K FastMix rounds in one Pallas launch.
+
+    Args:
+      S: ``(m, ...)`` stacked agent variables (trailing dims are flattened
+         into one column axis internally).
+      L: ``(m, m)`` symmetric doubly-stochastic mixing matrix.
+      eta: FastMix momentum (static; ``eta=0.0`` degenerates to fused naive
+         gossip ``L^K S``).
+      K: number of gossip rounds (static, unrolled inside the kernel).
+    Returns:
+      ``(m, ...)`` mixed variables in fp32, same logical shape as ``S``.
+    """
+    if K <= 0:
+        return S.astype(jnp.float32)
+    m = S.shape[0]
+    assert L.shape == (m, m), (S.shape, L.shape)
+    n = 1
+    for s in S.shape[1:]:
+        n *= s
+    x = S.reshape(m, n).astype(jnp.float32)
+
+    # Pad the agent axis once for MXU/VPU tiling (zeros are exact: padded
+    # rows/cols of L are zero, so the padded region stays identically zero
+    # through every round) and the column axis to the tile width.
+    mp = _round_up(m, 8 if interpret else 128)
+    bn = _round_up(min(block_n, n), 128)    # lane dim must stay 128-aligned
+    npad = _round_up(n, bn)
+    l_p = jnp.pad(L.astype(jnp.float32), ((0, mp - m), (0, mp - m)))
+    x_p = jnp.pad(x, ((0, mp - m), (0, npad - n)))
+
+    out = pl.pallas_call(
+        functools.partial(_fastmix_kernel, eta=float(eta), K=int(K)),
+        grid=(npad // bn,),
+        in_specs=[
+            pl.BlockSpec((mp, mp), lambda j: (0, 0)),   # L: resident
+            pl.BlockSpec((mp, bn), lambda j: (0, j)),   # S tile: read once
+        ],
+        out_specs=pl.BlockSpec((mp, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, npad), jnp.float32),
+        interpret=interpret,
+    )(l_p, x_p)
+    return out[:m, :n].reshape(S.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("K",))
+def fastmix_poly(S: jax.Array, L: jax.Array, eta: jax.Array | float,
+                 K: int) -> jax.Array:
+    """Algebraically fused FastMix: build ``P_K(L)`` then apply it once.
+
+    The FastMix recursion is linear in the iterate, so K rounds collapse to
+    a single mixing with the matrix polynomial ``P_K`` defined by
+    ``P_{-1} = P_0 = I`` and ``P_{k+1} = (1+eta) L P_k - eta P_{k-1}``.
+    Building ``P_K`` costs K ``(m, m) @ (m, m)`` matmuls (m is the agent
+    count — tiny), after which the ``(m, d*k)`` iterate makes exactly one
+    trip through memory instead of K.  This is the engine's fused fallback
+    on hosts where the Pallas kernel cannot compile.
+    """
+    if K <= 0:
+        return S
+    I = jnp.eye(L.shape[0], dtype=L.dtype)
+
+    def body(carry, _):
+        prev, cur = carry
+        nxt = (1.0 + eta) * (L @ cur) - eta * prev
+        return (cur, nxt), None
+
+    (_, P), _ = jax.lax.scan(body, (I, I), None, length=K)
+    return jnp.einsum("ij,j...->i...", P, S,
+                      precision=jax.lax.Precision.HIGHEST)

@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from . import fastmix as _fm
 from . import flash_attention as _fa
 from . import gram as _gram
 from . import power_matmul as _pm
@@ -36,6 +37,15 @@ def power_matmul(a: jax.Array, w: jax.Array, *, block_m: int = 512,
     it = _default_interpret() if interpret is None else interpret
     return _pm.power_matmul(a, w, block_m=block_m, block_k=block_k,
                             interpret=it)
+
+
+def fastmix_fused(S: jax.Array, L: jax.Array, eta: float, K: int, *,
+                  block_n: int = 512,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """All-K-rounds fused FastMix (Alg. 3) via the Pallas kernel."""
+    it = _default_interpret() if interpret is None else interpret
+    return _fm.fastmix_fused(S, L, float(eta), K, block_n=block_n,
+                             interpret=it)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -16,6 +16,17 @@ def power_matmul_ref(a: jax.Array, w: jax.Array) -> jax.Array:
     return a.astype(jnp.float32) @ w.astype(jnp.float32)
 
 
+def fastmix_ref(S: jax.Array, L: jax.Array, eta: float, K: int) -> jax.Array:
+    """Per-round FastMix recursion in fp32 (oracle for the fused kernel)."""
+    prev = cur = S.astype(jnp.float32)
+    L = L.astype(jnp.float32)
+    for _ in range(K):
+        mixed = jnp.einsum("ij,j...->i...", L, cur,
+                           precision=jax.lax.Precision.HIGHEST)
+        prev, cur = cur, (1.0 + eta) * mixed - eta * prev
+    return cur
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True) -> jax.Array:
     """Per-head exact softmax attention. q (Sq, hd), k/v (Skv, hd)."""

@@ -51,15 +51,16 @@ def make_train_step_compressed(cfg: ArchConfig, opt: AdamW, mesh, topo, *,
     over agents (leading axis m, sharded over ``axis``).
     """
     import numpy as np
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.compression.sharded import compress_local, init_state
-    from repro.core.gossip_shard import make_round_fn
-    from repro.core.mixing import fastmix_eta
+    from repro.core.consensus import ConsensusEngine
+    from repro.runtime.compat import shard_map
 
     m = int(np.prod(list(mesh.shape.values())))
-    round_fn = make_round_fn(topo, axis)
-    eta = fastmix_eta(topo.lambda2)
+    engine = ConsensusEngine.for_algorithm(
+        "deepca", topo, K=K, backend="shard_map", mesh=mesh, axis=axis)
+    round_fn = engine.local_round_fn(axis)
+    eta = engine.eta
 
     def init_comp_state(params):
         grads_t = jax.eval_shape(lambda p: p, params)

@@ -157,8 +157,8 @@ def _moe_shard_map(cfg: ArchConfig, p: Params, x: jax.Array, mesh, ep: str
     versus the scatter-dispatch GSPMD lowering that replicated the token
     buffer across the mesh.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+    from repro.runtime.compat import shard_map
     from . import partitioning as part
 
     b, s, d = x.shape

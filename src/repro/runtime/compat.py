@@ -1,0 +1,76 @@
+"""Version-portability shims for JAX APIs that moved between releases.
+
+The repo targets a range of JAX versions and two APIs it depends on are
+unstable across that range:
+
+* ``shard_map`` lives at ``jax.experimental.shard_map.shard_map`` up to
+  ~0.4.x/0.5.x and graduates to ``jax.shard_map`` in newer releases.
+* The replication-checking kwarg was renamed: older signatures take
+  ``check_rep=``, newer ones take ``check_vma=``.
+
+:func:`shard_map` below resolves both at import time, so call sites can be
+written once against the *newest* spelling (``check_vma=``) and still run on
+the installed version.  ``check_rep=`` is accepted too; whichever is passed
+is routed to the kwarg the installed ``shard_map`` actually understands.
+
+Usage (drop-in for ``from jax import shard_map``)::
+
+    from repro.runtime.compat import shard_map
+
+    f = shard_map(body, mesh=mesh, in_specs=..., out_specs=...,
+                  check_vma=False)          # works on every jax version
+
+Also usable as a decorator factory (``functools.partial`` style)::
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=..., out_specs=...,
+                       check_vma=False)
+    def step(...):
+        ...
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Callable, Optional
+
+import jax
+
+try:                                       # newest spelling (jax >= ~0.6)
+    from jax import shard_map as _shard_map_impl  # type: ignore[attr-defined]
+except ImportError:                        # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map_impl).parameters)
+
+#: The replication-check kwarg the *installed* shard_map understands
+#: (``"check_vma"``, ``"check_rep"``, or ``None`` if neither exists).
+SHARD_MAP_CHECK_KWARG: Optional[str] = (
+    "check_vma" if "check_vma" in _SHARD_MAP_PARAMS
+    else "check_rep" if "check_rep" in _SHARD_MAP_PARAMS
+    else None)
+
+
+def shard_map(f: Optional[Callable] = None, **kwargs):
+    """Version-portable ``shard_map``.
+
+    Accepts either ``check_vma=`` (new) or ``check_rep=`` (old) and passes
+    the value through as whichever kwarg the installed jax expects; all
+    other kwargs (``mesh``, ``in_specs``, ``out_specs``, ...) are forwarded
+    untouched.  With ``f=None`` returns a decorator, so it composes with
+    ``functools.partial`` exactly like the real ``shard_map``.
+    """
+    check = kwargs.pop("check_vma", None)
+    if check is None:                       # None means "use the default"
+        check = kwargs.pop("check_rep", None)
+    else:
+        kwargs.pop("check_rep", None)
+    if check is not None and SHARD_MAP_CHECK_KWARG is not None:
+        kwargs[SHARD_MAP_CHECK_KWARG] = check
+    if f is None:
+        return functools.partial(shard_map, **kwargs)
+    return _shard_map_impl(f, **kwargs)
+
+
+def default_backend_is_tpu() -> bool:
+    """True when the default jax backend compiles to TPU (Mosaic)."""
+    return jax.default_backend() == "tpu"

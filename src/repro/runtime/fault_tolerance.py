@@ -1,6 +1,7 @@
 """Fault-tolerant training-loop runtime.
 
-Pieces (each exercised by tests/test_fault_tolerance.py):
+Pieces (exercised by tests/test_substrates.py's checkpoint/restart,
+straggler and degraded-topology scenarios):
 
 * :class:`ResilientLoop` — checkpoint/restart supervisor: periodic async
   checkpoints, crash detection, resume with bitwise-identical data order

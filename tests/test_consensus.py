@@ -1,0 +1,187 @@
+"""ConsensusEngine: cross-backend FastMix parity + selection rules.
+
+The engine's contract is that `stacked` (per-round einsum reference),
+`pallas` (fused kernel / fused polynomial fallback) and `shard_map`
+(collective_permute / all_gather collectives) are the SAME operator up to
+fp32 round-off, on every supported topology, and that all of them preserve
+the mean over agents (Prop. 1's invariant).  The shard_map leg needs m
+devices, so it runs in a subprocess with fake XLA host devices.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ConsensusEngine, consensus_error, erdos_renyi,
+                        fastmix, fastmix_eta, hypercube, naive_mix,
+                        resolve_backend, ring)
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _topo(idx: int, m: int, seed: int):
+    if idx == 0:
+        return ring(max(m, 3))
+    if idx == 1:
+        return hypercube(1 << max(1, m.bit_length() - 1))
+    return erdos_renyi(max(m, 4), p=0.6, seed=seed)
+
+
+# ----------------------------------------------------- stacked vs fused
+@given(st.integers(2, 16), st.integers(1, 8), st.integers(0, 2),
+       st.integers(0, 100))
+@settings(max_examples=12, deadline=None)
+def test_fused_backends_match_stacked(m, k, topo_idx, seed):
+    """Pallas kernel (interpret) and poly fallback == per-round reference."""
+    topo = _topo(topo_idx, m, seed)
+    rng = np.random.default_rng(seed)
+    S = jnp.asarray(rng.standard_normal((topo.m, 16, k)), jnp.float32)
+    ref = ConsensusEngine(topo, K=6, backend="stacked").mix(S)
+    kern = ConsensusEngine(topo, K=6, backend="pallas", interpret=True).mix(S)
+    poly = ConsensusEngine(topo, K=6, backend="pallas").mix(S)
+    scale = float(jnp.max(jnp.abs(ref))) + 1.0
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(ref),
+                               rtol=TOL["rtol"], atol=TOL["atol"] * scale)
+    np.testing.assert_allclose(np.asarray(poly), np.asarray(ref),
+                               rtol=TOL["rtol"], atol=TOL["atol"] * scale)
+    # Prop. 1 invariant: the mean over agents is preserved by every backend.
+    for out in (ref, kern, poly):
+        np.testing.assert_allclose(np.mean(np.asarray(out), axis=0),
+                                   np.mean(np.asarray(S), axis=0), atol=1e-4)
+
+
+def test_fused_kernel_contracts_consensus():
+    topo = ring(16)
+    rng = np.random.default_rng(0)
+    S = jnp.asarray(rng.standard_normal((16, 32, 4)), jnp.float32)
+    eng = ConsensusEngine(topo, K=12, backend="pallas", interpret=True)
+    e0 = float(consensus_error(S))
+    e1 = float(consensus_error(eng.mix(S)))
+    assert e1 <= topo.fastmix_rate(12) * e0 * 1.05
+
+
+# --------------------------------------------------------- variants/API
+def test_naive_variant_is_plain_gossip():
+    topo = erdos_renyi(10, p=0.6, seed=1)
+    rng = np.random.default_rng(1)
+    S = jnp.asarray(rng.standard_normal((10, 8, 3)), jnp.float32)
+    L = jnp.asarray(topo.mixing, jnp.float32)
+    eng = ConsensusEngine(topo, K=5, backend="stacked", variant="naive")
+    np.testing.assert_allclose(np.asarray(eng.mix(S)),
+                               np.asarray(naive_mix(S, L, 5)), **TOL)
+    assert eng.eta == 0.0
+    # eta=0 in the fused kernel degenerates to L^K S exactly
+    fused = ConsensusEngine(topo, K=5, backend="pallas", variant="naive",
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(fused.mix(S)),
+                               np.asarray(naive_mix(S, L, 5)), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_rounds_override_matches_reference():
+    """DePCA's increasing-consensus schedule uses per-call rounds."""
+    topo = ring(8)
+    rng = np.random.default_rng(2)
+    S = jnp.asarray(rng.standard_normal((8, 8, 2)), jnp.float32)
+    L = jnp.asarray(topo.mixing, jnp.float32)
+    eng = ConsensusEngine(topo, K=3, backend="stacked")
+    for r in (1, 4, 9):
+        np.testing.assert_allclose(
+            np.asarray(eng.mix(S, rounds=r)),
+            np.asarray(fastmix(S, L, fastmix_eta(topo.lambda2), r)), **TOL)
+    np.testing.assert_allclose(np.asarray(eng.mix(S, rounds=0)),
+                               np.asarray(S), **TOL)
+
+
+def test_for_algorithm_selector():
+    topo = ring(8)
+    de = ConsensusEngine.for_algorithm("deepca", topo, K=4)
+    assert de.variant == "fastmix" and de.K == 4
+    dp = ConsensusEngine.for_algorithm("depca", topo, K=4, accelerate=False)
+    assert dp.variant == "naive"
+    with pytest.raises(ValueError):
+        ConsensusEngine.for_algorithm("qr-pca", topo, K=4)
+
+
+def test_selection_rules_and_validation():
+    topo = ring(8)
+    assert resolve_backend("stacked") == "stacked"
+    auto = resolve_backend("auto")
+    assert auto == ("pallas" if jax.default_backend() == "tpu" else "stacked")
+    with pytest.raises(ValueError):
+        resolve_backend("mpi")
+    with pytest.raises(ValueError):
+        ConsensusEngine(topo, K=4, variant="chebyshev9")
+    eng = ConsensusEngine(topo, K=4, backend="stacked")
+    with pytest.raises(ValueError):
+        eng.mix(jnp.zeros((9, 4, 2)))      # agent axis != topology.m
+
+
+def test_deepca_same_result_across_backends():
+    """End-to-end: deepca(backend='pallas') == deepca(backend='stacked')."""
+    from repro.core import synthetic_spiked, top_k_eigvecs, deepca
+    ops = synthetic_spiked(8, 16, 2, n_per_agent=24, seed=0)
+    U, _ = top_k_eigvecs(ops.mean_matrix(), 2)
+    rng = np.random.default_rng(3)
+    W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((16, 2)))[0],
+                     jnp.float32)
+    topo = erdos_renyi(8, p=0.6, seed=2)
+    r_ref = deepca(ops, topo, W0, k=2, T=15, K=5, U=U, backend="stacked")
+    r_fused = deepca(ops, topo, W0, k=2, T=15, K=5, U=U, backend="pallas")
+    np.testing.assert_allclose(np.asarray(r_fused.W), np.asarray(r_ref.W),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------- shard_map leg (slow)
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import ConsensusEngine, ring, hypercube, erdos_renyi
+
+    rng = np.random.default_rng(0)
+    for topo in (ring(8), hypercube(8), erdos_renyi(8, p=0.6, seed=4)):
+        S = jnp.asarray(rng.standard_normal((8, 24, 3)), jnp.float32)
+        ref = ConsensusEngine(topo, K=6, backend="stacked").mix(S)
+        fused = ConsensusEngine(topo, K=6, backend="pallas",
+                                interpret=True).mix(S)
+        shmap = ConsensusEngine(topo, K=6, backend="shard_map").mix(S)
+        for name, out in (("pallas", fused), ("shard_map", shmap)):
+            err = float(jnp.max(jnp.abs(out - ref)))
+            assert err < 2e-4, (topo.name, name, err)
+            merr = float(jnp.max(jnp.abs(jnp.mean(out, 0) - jnp.mean(S, 0))))
+            assert merr < 1e-4, (topo.name, name, merr)
+        print("OK", topo.name)
+
+    # ring(2) edge case: the single neighbour must not be double-counted
+    import jax
+    from jax.sharding import Mesh
+    topo2 = ring(2)
+    mesh2 = Mesh(np.asarray(jax.devices()[:2]), ("agents",))
+    S2 = jnp.asarray(rng.standard_normal((2, 8, 2)), jnp.float32)
+    ref2 = ConsensusEngine(topo2, K=4, backend="stacked").mix(S2)
+    out2 = ConsensusEngine(topo2, K=4, backend="shard_map", mesh=mesh2).mix(S2)
+    err2 = float(jnp.max(jnp.abs(out2 - ref2)))
+    assert err2 < 1e-5, ("ring2", err2)
+    print("OK ring2")
+    print("ALLOK")
+""")
+
+
+@pytest.mark.slow
+def test_three_backend_parity_with_devices():
+    """stacked == pallas-fused == shard_map on 8 fake devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ALLOK" in out.stdout

@@ -47,6 +47,36 @@ def test_power_matmul_matches_ref(d, k, dtype):
                                rtol=tol, atol=tol * np.sqrt(d) * 4)
 
 
+# ---------------------------------------------------------------- fastmix
+@pytest.mark.parametrize("m,n,k,K", [(4, 8, 2, 1), (8, 64, 8, 6),
+                                     (12, 50, 7, 8), (16, 256, 8, 4)])
+def test_fastmix_fused_matches_ref(m, n, k, K):
+    from repro.core.topology import ring
+    topo = ring(m)
+    rng = np.random.default_rng(m * 100 + K)
+    s = jnp.asarray(rng.standard_normal((m, n, k)), jnp.float32)
+    L = jnp.asarray(topo.mixing, jnp.float32)
+    eta = 0.3
+    got = ops.fastmix_fused(s, L, eta, K, block_n=128, interpret=True)
+    want = ref.fastmix_ref(s, L, eta, K)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(2, 20), st.integers(1, 6), st.integers(0, 8))
+@settings(max_examples=10, deadline=None)
+def test_fastmix_fused_property_random_shapes(m, k, K):
+    from repro.core.topology import complete
+    topo = complete(m)
+    rng = np.random.default_rng(m + k + K)
+    s = jnp.asarray(rng.standard_normal((m, 10, k)), jnp.float32)
+    L = jnp.asarray(topo.mixing, jnp.float32)
+    got = ops.fastmix_fused(s, L, 0.25, K, block_n=128, interpret=True)
+    want = ref.fastmix_ref(s, L, 0.25, K)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 # --------------------------------------------------------- flash_attention
 @pytest.mark.parametrize("sq,skv,hd,causal", [
     (32, 32, 16, True), (32, 32, 16, False),
