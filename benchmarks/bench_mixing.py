@@ -1,6 +1,6 @@
 """FastMix benchmarks: Prop. 1 validation + ConsensusEngine backend sweep.
 
-Two entry points:
+Three entry points:
 
 * :func:`main` (used by ``benchmarks.run``) — FastMix vs naive gossip
   contraction rates, measured vs theoretical, across topologies.
@@ -10,6 +10,14 @@ Two entry points:
   (m, d, k, K) grid and emits a comparison table with the fused-vs-stacked
   speedup per config.  Run with ``--sweep`` so fake host devices are set up
   before jax initialises and the shard_map rows can execute on CPU.
+* :func:`sweep_degraded` (``--degraded``) — the fleet-robustness table:
+  sweeps dead-agent counts x per-round edge-dropout rates over
+  ring/hypercube/er graphs, reporting the surviving spectral gap, the
+  Prop. 1 contraction bound and the *measured* K-round consensus
+  contraction under the corresponding :class:`TopologySchedule`.  Rows
+  whose survivor graph disconnects are reported as such (gossip cannot
+  contract there — the failure mode ``degrade_topology`` now refuses to
+  hide).
 """
 from __future__ import annotations
 
@@ -164,8 +172,91 @@ def _print_markdown(rows) -> None:
               f"**{speedup:.2f}×** |")
 
 
+# ---------------------------------------------------------- degraded sweep
+
+DEAD_COUNTS = (0, 1, 2, 4)
+DROP_RATES = (0.0, 0.1, 0.3)
+
+
+def sweep_degraded(writer=None, m: int = 16, K: int = 8, steps: int = 6,
+                   dead_counts=DEAD_COUNTS, drops=DROP_RATES,
+                   markdown: bool = False, seed: int = 0):
+    """Dead-agents x edge-dropout robustness sweep over ring/hypercube/er."""
+    from repro.core import TopologySchedule, DynamicConsensusEngine
+    from repro.runtime import DisconnectedTopologyError, degrade_topology
+
+    own = writer is None
+    if own and not markdown:
+        writer = csv.writer(sys.stdout)
+        writer.writerow(["name", "us_per_call", "derived"])
+    rng = np.random.default_rng(seed)
+    topologies = [ring(m), hypercube(m), erdos_renyi(m, p=0.5, seed=seed)]
+    rows = []
+    for topo in topologies:
+        for nd in dead_counts:
+            dead = sorted(rng.choice(m, size=nd, replace=False).tolist())
+            try:
+                base = degrade_topology(topo, dead) if nd else topo
+            except DisconnectedTopologyError:
+                for p in drops:
+                    rows.append((topo.name, nd, p, None))
+                    if writer is not None:
+                        writer.writerow([
+                            f"mixing_degraded/{topo.name}/dead{nd}/drop{p}",
+                            "nan", "disconnected"])
+                continue
+            for p in drops:
+                sched = TopologySchedule.edge_dropout(base, p, seed=seed + 1)
+                eng = DynamicConsensusEngine(schedule=sched, K=K,
+                                             backend="stacked")
+                S = jnp.asarray(
+                    rng.standard_normal((base.m, 64, 8)), jnp.float32)
+                e0 = float(consensus_error(S))
+                gaps, contractions, bounds = [], [], []
+                for t in range(steps):
+                    tp = sched.topology_at(t)
+                    gaps.append(tp.spectral_gap)
+                    bounds.append(tp.fastmix_rate(K))
+                    contractions.append(
+                        float(consensus_error(eng.mix_at(S, t))) / e0)
+                row = (topo.name, nd, p,
+                       (float(np.min(gaps)), float(np.mean(contractions)),
+                        float(np.mean(bounds)), base.m))
+                rows.append(row)
+                if writer is not None:
+                    gap, meas, bound, surv = row[3]
+                    writer.writerow([
+                        f"mixing_degraded/{topo.name}/dead{nd}/drop{p}",
+                        f"{meas:.3e}",
+                        f"survivors={surv};min_gap={gap:.4f};"
+                        f"bound={bound:.3e};K={K}"])
+    if markdown:
+        _print_degraded_markdown(rows, m, K, steps)
+    return rows
+
+
+def _print_degraded_markdown(rows, m: int, K: int, steps: int) -> None:
+    print(f"\n### Fault-degraded FastMix sweep (m={m}, K={K}, "
+          f"{steps} schedule steps, measured = mean K-round consensus "
+          f"contraction)\n")
+    print("| topology | dead agents | edge dropout | survivors | min gap | "
+          "measured contraction | Prop. 1 bound |")
+    print("|----------|-------------|--------------|-----------|---------|"
+          "----------------------|---------------|")
+    for name, nd, p, stats in rows:
+        if stats is None:
+            print(f"| {name} | {nd} | {p} | — | — | DISCONNECTED "
+                  "(gossip cannot contract) | — |")
+            continue
+        gap, meas, bound, surv = stats
+        print(f"| {name} | {nd} | {p} | {surv} | {gap:.4f} | {meas:.3e} | "
+              f"{bound:.3e} |")
+
+
 if __name__ == "__main__":
     if "--sweep" in sys.argv:
         sweep_backends(writer=None, markdown=True)
+    elif "--degraded" in sys.argv:
+        sweep_degraded(writer=None, markdown=True)
     else:
         main()

@@ -55,16 +55,18 @@ def main() -> None:
     W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((args.d, args.k)))[0])
 
     # run in blocks of 20 power iterations; the full DeEPCA state
-    # (S, W, G_prev) is carried across blocks — and checkpointed, so a crash
-    # resumes mid-algorithm with zero lost progress.  (W0 itself is
-    # deterministic from the seed, so only the state tuple is checkpointed.)
+    # (S, W, G_prev, offset) is carried across blocks — and checkpointed, so
+    # a crash resumes mid-algorithm with zero lost progress, including the
+    # cumulative round/iteration offset.  (W0 itself is deterministic from
+    # the seed, so only the state tuple is checkpointed.)
     start = 0
     state = None
     W_run = W0
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         (state,), start = restore(
             args.ckpt_dir,
-            ((np.zeros((args.m, args.d, args.k)),) * 3,))
+            ((np.zeros((args.m, args.d, args.k)),) * 3
+             + (np.zeros(2, dtype=np.int32),),))
         state = tuple(jnp.asarray(s) for s in state)
         W_run = jnp.linalg.qr(jnp.mean(state[1], axis=0))[0]
         print(f"[resume] from checkpointed DeEPCA state at block {start}")

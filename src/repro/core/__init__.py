@@ -1,24 +1,31 @@
 """DeEPCA core: the paper's contribution as composable JAX modules."""
 from .topology import (Topology, ring, torus2d, hypercube, complete,
-                       erdos_renyi, make_topology, validate_mixing)
+                       erdos_renyi, from_adjacency, make_topology,
+                       validate_mixing)
 from .mixing import fastmix, naive_mix, fastmix_eta, consensus_error
-from .consensus import ConsensusEngine, resolve_backend, BACKENDS, VARIANTS
+from .consensus import (ConsensusEngine, DynamicConsensusEngine,
+                        resolve_backend, BACKENDS, VARIANTS)
+from .schedule import TopologySchedule, adjacency_of
 from .operators import (StackedOperators, synthetic_spiked, libsvm_like,
                         top_k_eigvecs)
 from .algorithms import (deepca, depca, centralized_power_method, sign_adjust,
                          DecentralizedPCAResult, PowerTrace,
                          theory_consensus_rounds)
-from .gossip_shard import DistributedDeEPCA, make_round_fn, fastmix_local
+from .gossip_shard import (DistributedDeEPCA, fastmix_local,
+                           hypercube_structure, make_round_fn, ring_structure)
 from . import metrics
 
 __all__ = [
     "Topology", "ring", "torus2d", "hypercube", "complete", "erdos_renyi",
-    "make_topology", "validate_mixing",
+    "from_adjacency", "make_topology", "validate_mixing",
     "fastmix", "naive_mix", "fastmix_eta", "consensus_error",
-    "ConsensusEngine", "resolve_backend", "BACKENDS", "VARIANTS",
+    "ConsensusEngine", "DynamicConsensusEngine", "resolve_backend",
+    "BACKENDS", "VARIANTS",
+    "TopologySchedule", "adjacency_of",
     "StackedOperators", "synthetic_spiked", "libsvm_like", "top_k_eigvecs",
     "deepca", "depca", "centralized_power_method", "sign_adjust",
     "DecentralizedPCAResult", "PowerTrace", "theory_consensus_rounds",
     "DistributedDeEPCA", "make_round_fn", "fastmix_local",
+    "ring_structure", "hypercube_structure",
     "metrics",
 ]

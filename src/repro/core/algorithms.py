@@ -17,9 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import metrics
-from .consensus import ConsensusEngine
+from .consensus import ConsensusEngine, DynamicConsensusEngine
 from .mixing import consensus_error
 from .operators import StackedOperators, top_k_eigvecs
+from .schedule import TopologySchedule
 from .topology import Topology
 
 
@@ -42,7 +43,8 @@ class PowerTrace(NamedTuple):
     w_consensus: jax.Array      # ||W^t - W_bar^t (x) 1||
     mean_tan_theta: jax.Array   # (1/m) sum_j tan theta_k(U, W_j^t)
     tan_theta_mean: jax.Array   # tan theta_k(U, S_bar^t)
-    comm_rounds: jax.Array      # cumulative gossip rounds ( = t*K )
+    comm_rounds: jax.Array      # cumulative gossip rounds (resume-continuous)
+    contraction_rate: jax.Array  # per-iteration Prop. 1 gossip bound rho_t
 
 
 @dataclasses.dataclass
@@ -50,7 +52,10 @@ class DecentralizedPCAResult:
     W: jax.Array                # (m, d, k) final local estimates
     trace: PowerTrace
     name: str
-    state: Optional[tuple] = None   # (S, W_stack, G_prev) — resumable
+    # (S, W_stack, G_prev, offset) — resumable; offset = [comm_rounds, iters]
+    # carries the cumulative round/iteration count across restarts (legacy
+    # 3-tuples are accepted with a zero offset)
+    state: Optional[tuple] = None
 
 
 def centralized_power_method(A: jax.Array, W0: jax.Array, iters: int,
@@ -79,72 +84,125 @@ def _make_trace(ops: StackedOperators, U: jax.Array,
     }
 
 
-def deepca(ops: StackedOperators, topology: Topology, W0: jax.Array, *,
+def deepca(ops: StackedOperators, topology: Optional[Topology],
+           W0: jax.Array, *,
            k: int, T: int, K: int, U: Optional[jax.Array] = None,
            accelerate: bool = True, state: Optional[tuple] = None,
            backend: str = "auto",
-           engine: Optional[ConsensusEngine] = None
+           engine=None,
+           schedule: Optional[TopologySchedule] = None
            ) -> DecentralizedPCAResult:
     """Alg. 1 — Decentralized Exact PCA with subspace tracking.
 
     Args:
       ops: stacked local operators A_j (dense or implicit Gram).
-      topology: gossip graph; its mixing matrix is used by FastMix.
+      topology: gossip graph; its mixing matrix is used by FastMix.  May be
+         ``None`` when ``schedule`` (or a dynamic ``engine``) supplies the
+         per-step graphs.
       W0: (d, k) common orthonormal initialisation (all agents identical).
       T: number of power iterations.
       K: FastMix rounds per power iteration — independent of target eps
          (the paper's headline property, Thm. 1 / Eqn. 3.11).
       U: optional ground-truth top-k eigenvectors for diagnostics.
       accelerate: FastMix (True) or naive gossip (False) consensus.
+      state: resume tuple from a previous run's ``result.state``; its offset
+         entry continues iteration/round accounting (and schedule indexing)
+         where the previous run stopped.
       backend: ConsensusEngine backend (``auto``/``stacked``/``pallas``/
          ``shard_map``; see :mod:`repro.core.consensus` selection rules).
-      engine: pre-built engine; overrides topology/K/accelerate/backend.
+      engine: pre-built :class:`ConsensusEngine` or
+         :class:`DynamicConsensusEngine`; overrides
+         topology/K/accelerate/backend (and ``schedule`` for the dynamic
+         kind).
+      schedule: time-varying gossip graphs (Remark 3).  Iteration ``t``
+         (global, i.e. offset by a resumed state) mixes with
+         ``schedule.topology_at(t)``; the per-step mixing matrices enter the
+         scan as traced operands so graph changes never retrace.
     """
     m, d = ops.m, ops.d
     if U is None:
         U, _ = top_k_eigvecs(ops.mean_matrix(), k)
 
+    if isinstance(engine, DynamicConsensusEngine):
+        dyn = engine
+    elif schedule is not None:
+        dyn = DynamicConsensusEngine.for_algorithm(
+            "deepca", schedule, K=K, backend=backend, accelerate=accelerate)
+    else:
+        dyn = None
+
     # run the iteration in the dtype ops.apply will promote to, so the scan
     # carry is type-stable even for a low-precision W0 (e.g. bf16 + f32 data)
     dt = jnp.result_type(W0.dtype, ops.dtype)
 
+    rounds0 = iters0 = 0
     if state is not None:
         # resume (checkpoint/restart support); same dtype cast as the fresh
         # start so a low-precision checkpoint doesn't break the scan carry
-        S, W_stack, G_prev = (x.astype(dt) for x in state)
+        S, W_stack, G_prev = (x.astype(dt) for x in state[:3])
+        if len(state) > 3:
+            off = np.asarray(state[3])
+            rounds0, iters0 = int(off[0]), int(off[1])
     else:
         W_stack = jnp.broadcast_to(W0, (m, d, k)).astype(dt)
         # Alg. 1 line 2: S_j^0 = W^0 and A_j W_j^{-1} := W^0, i.e. G^0 := W^0.
         S = W_stack
         G_prev = W_stack
 
-    if engine is None:
-        engine = ConsensusEngine.for_algorithm(
-            "deepca", topology, K=K, backend=backend, accelerate=accelerate)
-    mix = engine.mix
+    if dyn is not None:
+        if dyn.schedule.constant_m(iters0, T) != m:
+            raise ValueError(
+                f"schedule agent count != ops.m={m} over iterations "
+                f"[{iters0}, {iters0 + T})")
+        Ls, etas = dyn.operands(iters0, T, dtype=dt)
 
-    def step(carry, _):
-        S, W, G_prev = carry
-        G = ops.apply(W)                      # A_j W_j^t  (local compute)
-        S_new = S + G - G_prev                # Eqn. (3.1): subspace tracking
-        S_new = mix(S_new)                    # Eqn. (3.2): FastMix consensus
-        W_new = _qr_orth(S_new)               # Eqn. (3.3): local QR
-        W_new = sign_adjust(W_new, W0)        # Alg. 2
-        return (S_new, W_new, G), (S_new, W_new)
+        def step(carry, xs):
+            L_t, eta_t = xs
+            S, W, G_prev = carry
+            G = ops.apply(W)                  # A_j W_j^t  (local compute)
+            S_new = S + G - G_prev            # Eqn. (3.1): subspace tracking
+            S_new = dyn.mix_traced(S_new, L_t, eta_t)   # Eqn. (3.2), step-t L
+            W_new = _qr_orth(S_new)           # Eqn. (3.3): local QR
+            W_new = sign_adjust(W_new, W0)    # Alg. 2
+            return (S_new, W_new, G), (S_new, W_new)
 
-    (S, W_stack, G_prev), (S_hist, W_hist) = jax.lax.scan(
-        step, (S, W_stack, G_prev), None, length=T)
+        (S, W_stack, G_prev), (S_hist, W_hist) = jax.lax.scan(
+            step, (S, W_stack, G_prev), (Ls, etas), length=T)
+        rates = dyn.contraction_rates(iters0, T)
+    else:
+        if engine is None:
+            engine = ConsensusEngine.for_algorithm(
+                "deepca", topology, K=K, backend=backend,
+                accelerate=accelerate)
+        mix = engine.mix
 
-    trace = _collect_trace(ops, U, S_hist, W_hist, K)
+        def step(carry, _):
+            S, W, G_prev = carry
+            G = ops.apply(W)                  # A_j W_j^t  (local compute)
+            S_new = S + G - G_prev            # Eqn. (3.1): subspace tracking
+            S_new = mix(S_new)                # Eqn. (3.2): FastMix consensus
+            W_new = _qr_orth(S_new)           # Eqn. (3.3): local QR
+            W_new = sign_adjust(W_new, W0)    # Alg. 2
+            return (S_new, W_new, G), (S_new, W_new)
+
+        (S, W_stack, G_prev), (S_hist, W_hist) = jax.lax.scan(
+            step, (S, W_stack, G_prev), None, length=T)
+        rates = np.full(T, engine.contraction_rate(), dtype=np.float32)
+
+    trace = _collect_trace(ops, U, S_hist, W_hist, K, rounds0=rounds0,
+                           rates=rates)
+    offset = jnp.asarray([rounds0 + T * K, iters0 + T], jnp.int32)
     return DecentralizedPCAResult(W=W_stack, trace=trace, name="DeEPCA",
-                                  state=(S, W_stack, G_prev))
+                                  state=(S, W_stack, G_prev, offset))
 
 
-def depca(ops: StackedOperators, topology: Topology, W0: jax.Array, *,
+def depca(ops: StackedOperators, topology: Optional[Topology],
+          W0: jax.Array, *,
           k: int, T: int, K: int, U: Optional[jax.Array] = None,
           accelerate: bool = True, increasing_consensus: bool = False,
           backend: str = "auto",
-          engine: Optional[ConsensusEngine] = None
+          engine=None,
+          schedule: Optional[TopologySchedule] = None
           ) -> DecentralizedPCAResult:
     """Baseline decentralized power method (Eqn. 3.4; Wai et al. 2017).
 
@@ -153,50 +211,88 @@ def depca(ops: StackedOperators, topology: Topology, W0: jax.Array, *,
     data heterogeneity, so K must grow with 1/eps (Eqn. 3.12).  With
     ``increasing_consensus=True`` we emulate the practical fix of growing the
     round count: iteration t uses ``K + t`` rounds (the ConsensusEngine's
-    per-call ``rounds`` override, unrolled python loop).
+    per-call ``rounds`` override, unrolled python loop).  ``schedule``
+    switches the gossip graph per iteration, same contract as
+    :func:`deepca`.
     """
     m, d = ops.m, ops.d
     if U is None:
         U, _ = top_k_eigvecs(ops.mean_matrix(), k)
 
-    if engine is None:
-        engine = ConsensusEngine.for_algorithm(
-            "depca", topology, K=K, backend=backend, accelerate=accelerate)
+    if isinstance(engine, DynamicConsensusEngine):
+        dyn = engine
+    elif schedule is not None:
+        dyn = DynamicConsensusEngine.for_algorithm(
+            "depca", schedule, K=K, backend=backend, accelerate=accelerate)
+    else:
+        dyn = None
+        if engine is None:
+            engine = ConsensusEngine.for_algorithm(
+                "depca", topology, K=K, backend=backend,
+                accelerate=accelerate)
 
     dt = jnp.result_type(W0.dtype, ops.dtype)
     W_stack = jnp.broadcast_to(W0, (m, d, k)).astype(dt)
+    if dyn is not None and dyn.schedule.constant_m(0, T) != m:
+        raise ValueError(f"schedule agent count != ops.m={m}")
 
-    def one_iter(W_stack, rounds: int):
+    def one_iter(W_stack, rounds: int, t: int):
         G = ops.apply(W_stack)
-        G = engine.mix(G, rounds=rounds)
+        if dyn is not None:
+            topo_t = dyn.topology_at(t)
+            G = dyn.mix_traced(G, jnp.asarray(topo_t.mixing, dt),
+                               dyn.eta_of(topo_t), rounds=rounds)
+        else:
+            G = engine.mix(G, rounds=rounds)
         W_new = _qr_orth(G)
         W_new = sign_adjust(W_new, W0)
         return G, W_new
 
+    def rate_at(t: int, rounds: int) -> float:
+        if dyn is not None:
+            return float(dyn.contraction_rates(t, 1, rounds=rounds)[0])
+        return engine.contraction_rate(rounds)
+
     if increasing_consensus:
-        S_hist, W_hist, rounds_hist = [], [], []
+        S_hist, W_hist, rounds_hist, rates = [], [], [], []
         total = 0
         for t in range(T):
             rounds = K + t
             total += rounds
-            S, W_stack = one_iter(W_stack, rounds)
+            S, W_stack = one_iter(W_stack, rounds, t)
             S_hist.append(S); W_hist.append(W_stack); rounds_hist.append(total)
+            rates.append(rate_at(t, rounds))
         S_hist = jnp.stack(S_hist); W_hist = jnp.stack(W_hist)
         trace = _collect_trace(ops, U, S_hist, W_hist, None,
-                               rounds=np.asarray(rounds_hist, dtype=np.float32))
+                               rounds=np.asarray(rounds_hist, dtype=np.float32),
+                               rates=np.asarray(rates, dtype=np.float32))
+    elif dyn is not None:
+        # unrolled python loop: per-step graphs are resolved statically but
+        # the mixing matrices remain traced operands (no per-graph retrace)
+        S_hist, W_hist = [], []
+        for t in range(T):
+            S, W_stack = one_iter(W_stack, K, t)
+            S_hist.append(S); W_hist.append(W_stack)
+        S_hist = jnp.stack(S_hist); W_hist = jnp.stack(W_hist)
+        trace = _collect_trace(ops, U, S_hist, W_hist, K,
+                               rates=dyn.contraction_rates(0, T))
     else:
         def step(W_stack, _):
-            S, W_new = one_iter(W_stack, K)
+            S, W_new = one_iter(W_stack, K, 0)
             return W_new, (S, W_new)
 
         W_stack, (S_hist, W_hist) = jax.lax.scan(step, W_stack, None, length=T)
-        trace = _collect_trace(ops, U, S_hist, W_hist, K)
+        trace = _collect_trace(
+            ops, U, S_hist, W_hist, K,
+            rates=np.full(T, engine.contraction_rate(), dtype=np.float32))
 
     return DecentralizedPCAResult(W=W_stack, trace=trace, name="DePCA")
 
 
 def _collect_trace(ops, U, S_hist, W_hist, K: Optional[int],
-                   rounds: Optional[np.ndarray] = None) -> PowerTrace:
+                   rounds: Optional[np.ndarray] = None,
+                   rounds0: int = 0,
+                   rates: Optional[np.ndarray] = None) -> PowerTrace:
     T = S_hist.shape[0]
 
     def per_t(S, W):
@@ -207,8 +303,12 @@ def _collect_trace(ops, U, S_hist, W_hist, K: Optional[int],
     s_c, w_c, mtt, ttm = jax.vmap(per_t)(S_hist, W_hist)
     if rounds is None:
         rounds = np.arange(1, T + 1, dtype=np.float32) * float(K)
+    rounds = np.asarray(rounds, dtype=np.float32) + float(rounds0)
+    if rates is None:
+        rates = np.full(T, np.nan, dtype=np.float32)
     return PowerTrace(s_consensus=s_c, w_consensus=w_c, mean_tan_theta=mtt,
-                      tan_theta_mean=ttm, comm_rounds=jnp.asarray(rounds))
+                      tan_theta_mean=ttm, comm_rounds=jnp.asarray(rounds),
+                      contraction_rate=jnp.asarray(rates, dtype=jnp.float32))
 
 
 def theory_consensus_rounds(topology: Topology, *, k: int, L: float,

@@ -46,6 +46,31 @@ Variants
 ``naive``    plain gossip ``S <- L S`` (the DePCA / Xiao-Boyd baseline);
              internally just ``eta = 0``, so every backend supports it.
 :meth:`ConsensusEngine.for_algorithm` encodes the deepca/depca mapping.
+
+Dynamic topologies
+------------------
+Remark 3 of the paper: FastMix only needs the graph to be connected at each
+round, not fixed.  :class:`DynamicConsensusEngine` runs gossip over a
+:class:`~repro.core.schedule.TopologySchedule` (step -> topology) without
+retracing the hot path:
+
+* ``stacked`` / ``pallas`` consume the mixing matrix ``L`` and momentum
+  ``eta`` as **traced operands** (:meth:`DynamicConsensusEngine.mix_traced`)
+  — the jit cache is keyed on shape, so any same-``m`` graph swap reuses the
+  compiled computation.  ``deepca(schedule=...)`` stacks the per-step
+  ``(T, m, m)`` matrices and scans over them.
+* ``shard_map`` keeps the ``collective_permute`` lowering only while the
+  mixing matrix *structurally* matches a ring/hypercube
+  (:func:`repro.core.gossip_shard.ring_structure` /
+  :func:`~repro.core.gossip_shard.hypercube_structure` verify the actual
+  matrix, not the name); any degraded/rewired graph falls back to the dense
+  ``all_gather`` round, whose ``(L, eta)`` ride along as replicated operands
+  so dense-to-dense swaps never retrace.  Structured graphs get one compiled
+  step each (cached per topology name).
+* agent-death degradation changes ``m`` and therefore cannot be expressed as
+  an in-scan swap; it is handled segment-wise by
+  :func:`repro.runtime.fault_tolerance.deepca_with_failures` (degrade ->
+  compact state -> resume), with the same engines underneath.
 """
 from __future__ import annotations
 
@@ -72,6 +97,46 @@ def resolve_backend(backend: str) -> str:
     if backend != "auto":
         return backend
     return "pallas" if jax.default_backend() == "tpu" else "stacked"
+
+
+def _variant_eta(variant: str, lambda2: float) -> float:
+    """Chebyshev momentum; 0.0 degenerates every backend to naive gossip."""
+    return 0.0 if variant == "naive" else fastmix_eta(lambda2)
+
+
+def _resolve_mesh(mesh, m: int, axis: str):
+    """The shard_map backends' mesh: the caller's, or all host devices."""
+    if mesh is not None:
+        return mesh
+    from jax.sharding import Mesh
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) != m:
+        raise ValueError(
+            f"shard_map backend needs a mesh with {m} devices along "
+            f"{axis!r}; have {len(devs)} devices and no mesh was supplied")
+    return Mesh(np.asarray(devs), (axis,))
+
+
+def _fused_mix(S: jax.Array, L: jax.Array, eta, rounds: int, *,
+               interpret: Optional[bool], block_n: int) -> jax.Array:
+    """Fused-backend dispatch shared by the static and dynamic engines.
+
+    fp32 accumulation in both fused paths; cast back so the engine
+    preserves the caller's dtype like the stacked reference does.
+    Exception: f64 iterates (x64 workloads chasing <1e-8 targets) must not
+    round-trip through fp32, so they take the polynomial path in full f64 —
+    still fused, no precision cliff.
+    """
+    from repro.kernels import fastmix as _fm
+    if S.dtype == jnp.float64:
+        return _fm.fastmix_poly(S, L.astype(jnp.float64), eta, rounds)
+    L32 = L.astype(jnp.float32)
+    if interpret is True or jax.default_backend() == "tpu":
+        out = _fm.fastmix_fused(S, L32, eta, rounds, block_n=block_n,
+                                interpret=interpret is True)
+        return out.astype(S.dtype)
+    return _fm.fastmix_poly(S, L32, eta, rounds).astype(S.dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,9 +189,7 @@ class ConsensusEngine:
     @property
     def eta(self) -> float:
         """Chebyshev momentum; 0.0 degenerates every backend to naive gossip."""
-        if self.variant == "naive":
-            return 0.0
-        return fastmix_eta(self.topology.lambda2)
+        return _variant_eta(self.variant, self.topology.lambda2)
 
     @property
     def mixing_matrix(self) -> jax.Array:
@@ -171,39 +234,16 @@ class ConsensusEngine:
         return self._mix_shard_map(S, r)
 
     def _mix_fused(self, S: jax.Array, rounds: int) -> jax.Array:
-        # fp32 accumulation in both fused paths; cast back so the engine
-        # preserves the caller's dtype like the stacked reference does.
-        # Exception: f64 iterates (x64 workloads chasing <1e-8 targets) must
-        # not round-trip through fp32, so they take the polynomial path in
-        # full f64 — still fused, no precision cliff.
-        from repro.kernels import fastmix as _fm
-        if S.dtype == jnp.float64:
-            return _fm.fastmix_poly(S, self._L(jnp.float64), self.eta, rounds)
-        L = self._L(jnp.float32)
-        use_kernel = (self.interpret is True
-                      or jax.default_backend() == "tpu")
-        if use_kernel:
-            out = _fm.fastmix_fused(
-                S, L, float(self.eta), rounds, block_n=self.block_n,
-                interpret=self.interpret is True)
-            return out.astype(S.dtype)
-        return _fm.fastmix_poly(S, L, self.eta, rounds).astype(S.dtype)
+        dtype = jnp.float64 if S.dtype == jnp.float64 else jnp.float32
+        return _fused_mix(S, self._L(dtype), self.eta, rounds,
+                          interpret=self.interpret, block_n=self.block_n)
 
     def _mix_shard_map(self, S: jax.Array, rounds: int) -> jax.Array:
         fn = self._sharded_mix_cache.get(rounds)
         if fn is None:
             from repro.runtime.compat import shard_map
-            from jax.sharding import Mesh, PartitionSpec as P
-            import numpy as np
-            mesh = self.mesh
-            if mesh is None:
-                devs = jax.devices()
-                if len(devs) != self.topology.m:
-                    raise ValueError(
-                        f"shard_map backend needs a mesh with "
-                        f"{self.topology.m} devices along {self.axis!r}; "
-                        f"have {len(devs)} devices and no mesh was supplied")
-                mesh = Mesh(np.asarray(devs), (self.axis,))
+            from jax.sharding import PartitionSpec as P
+            mesh = _resolve_mesh(self.mesh, self.topology.m, self.axis)
             fn = jax.jit(shard_map(
                 lambda x: self.local_mix(x, axis=self.axis, rounds=rounds),
                 mesh=mesh, in_specs=P(self.axis), out_specs=P(self.axis),
@@ -242,4 +282,146 @@ class ConsensusEngine:
             raise ValueError(f"unknown algorithm {algorithm!r}")
         variant = "fastmix" if accelerate else "naive"
         return cls(topology=topology, K=K, backend=backend, variant=variant,
+                   **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicConsensusEngine:
+    """Gossip over a time-varying topology, without retracing the hot path.
+
+    Wraps a :class:`~repro.core.schedule.TopologySchedule`.  Two consumption
+    styles:
+
+    * **eager** — :meth:`mix_at`/:meth:`engine_at` resolve the step's
+      topology to a cached per-topology :class:`ConsensusEngine` (full
+      backend-selection rules apply, including the structured shard_map
+      lowering when the matrix still matches).
+    * **traced** — :meth:`operands` stacks the window's mixing matrices and
+      momenta into ``(T, m, m)`` / ``(T,)`` arrays and :meth:`mix_traced`
+      mixes with them as traced values; this is what ``deepca(schedule=...)``
+      scans over.  All three backends participate: stacked/pallas take
+      ``(L, eta)`` directly, shard_map uses one cached dense ``all_gather``
+      program with ``(L, eta)`` replicated.
+    """
+
+    schedule: object                    # TopologySchedule (duck-typed)
+    K: int
+    backend: str = "auto"
+    variant: str = "fastmix"
+    mesh: Optional[object] = None
+    axis: str = AXIS
+    interpret: Optional[bool] = None
+    block_n: int = 512
+    _engines: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
+    _traced_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(
+                f"variant must be one of {VARIANTS}, got {self.variant!r}")
+        object.__setattr__(self, "backend", resolve_backend(self.backend))
+
+    # ---------------------------------------------------------- per-step
+    def topology_at(self, t: int):
+        return self.schedule.topology_at(t)
+
+    def engine_at(self, t: int) -> ConsensusEngine:
+        """The step's static engine (cached per topology *object*).
+
+        Keyed by identity, not name: schedules memoize per step, so the key
+        is stable, and a user schedule that reuses one name for different
+        graphs can never be served a stale engine.
+        """
+        topo = self.schedule.topology_at(t)
+        key = (topo.name, id(topo))
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = ConsensusEngine(
+                topology=topo, K=self.K, backend=self.backend,
+                variant=self.variant, mesh=self.mesh, axis=self.axis,
+                interpret=self.interpret, block_n=self.block_n)
+            self._engines[key] = eng
+        return eng
+
+    def mix_at(self, S: jax.Array, t: int,
+               rounds: Optional[int] = None) -> jax.Array:
+        """Eager per-step mix (resolves the topology in force at step t)."""
+        return self.engine_at(t).mix(S, rounds=rounds)
+
+    def eta_of(self, topology) -> float:
+        return _variant_eta(self.variant, topology.lambda2)
+
+    def contraction_rates(self, t0: int, T: int,
+                          rounds: Optional[int] = None):
+        """Per-iteration Prop. 1 contraction bounds over ``[t0, t0+T)``."""
+        r = self.K if rounds is None else int(rounds)
+        return self.schedule.contraction_rates(
+            t0, T, r, accelerate=(self.variant == "fastmix"))
+
+    # -------------------------------------------------- traced operands
+    def operands(self, t0: int, T: int, dtype=jnp.float32):
+        """``(Ls, etas)`` — ``(T, m, m)`` mixing stack + ``(T,)`` momenta.
+
+        Validates the window has constant ``m`` (scan shapes are static).
+        """
+        self.schedule.constant_m(t0, T)
+        topos = self.schedule.topologies(t0, T)
+        import numpy as np
+        Ls = jnp.asarray(np.stack([tp.mixing for tp in topos]), dtype=dtype)
+        etas = jnp.asarray([self.eta_of(tp) for tp in topos], dtype=dtype)
+        return Ls, etas
+
+    def mix_traced(self, S: jax.Array, L: jax.Array, eta,
+                   rounds: Optional[int] = None) -> jax.Array:
+        """Mix with ``(L, eta)`` as traced values (jit-cache keyed on shape).
+
+        This is the scan-body entry point: callable under an outer trace,
+        with ``L`` one slice of :meth:`operands`' stack.
+        """
+        r = self.K if rounds is None else int(rounds)
+        if r <= 0:
+            return S
+        if self.backend == "stacked":
+            return fastmix(S, L.astype(S.dtype), eta, r)
+        if self.backend == "pallas":
+            return _fused_mix(S, L, eta, r, interpret=self.interpret,
+                              block_n=self.block_n)
+        return self._mix_shard_map_traced(S, L, eta, r)
+
+    def _mix_shard_map_traced(self, S, L, eta, rounds: int):
+        # the dense all_gather round is the only lowering valid for EVERY
+        # graph in a schedule, so the traced shard_map path always uses it;
+        # (L, eta) are replicated operands -> one compiled program per
+        # rounds value, shared by all topologies
+        fn = self._traced_cache.get(rounds)
+        if fn is None:
+            from repro.runtime.compat import shard_map
+            from jax.sharding import PartitionSpec as P
+            from .gossip_shard import _dense_round, fastmix_local
+            mesh = _resolve_mesh(self.mesh, self.schedule.topology_at(0).m,
+                                 self.axis)
+            axis = self.axis
+
+            def body(x, Lrep, etarep):
+                return fastmix_local(
+                    x, lambda y: _dense_round(y, Lrep, axis), etarep, rounds)
+
+            fn = jax.jit(shard_map(
+                body, mesh=mesh, in_specs=(P(self.axis), P(), P()),
+                out_specs=P(self.axis), check_vma=False))
+            self._traced_cache[rounds] = fn
+        return fn(S, L, eta)
+
+    # -------------------------------------------------------- construction
+    @classmethod
+    def for_algorithm(cls, algorithm: str, schedule, K: int, *,
+                      backend: str = "auto", accelerate: bool = True,
+                      **kw) -> "DynamicConsensusEngine":
+        """Schedule-driven counterpart of :meth:`ConsensusEngine.for_algorithm`."""
+        if algorithm not in ("deepca", "depca"):
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        variant = "fastmix" if accelerate else "naive"
+        return cls(schedule=schedule, K=K, backend=backend, variant=variant,
                    **kw)

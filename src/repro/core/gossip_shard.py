@@ -19,6 +19,8 @@ import dataclasses
 import functools
 from typing import Callable, Optional, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -54,20 +56,64 @@ def _hypercube_round(x: jax.Array, m: int, axis: str):
 
 def _dense_round(x: jax.Array, L: jax.Array, axis: str):
     # x: (1, d, k) local slice; all_gather -> (m, d, k); weight with own row.
+    # L must already be in the iterate dtype — do NOT down-cast here (x64
+    # iterates would silently lose the stacked-reference parity).
     allx = jax.lax.all_gather(x, axis, axis=0, tiled=True)   # (m, d, k)
-    row = L[jax.lax.axis_index(axis)]                        # (m,)
+    row = L[jax.lax.axis_index(axis)].astype(x.dtype)        # (m,)
     return jnp.einsum("j,jdk->dk", row, allx)[None]
+
+
+def ring_structure(topology: Topology) -> Optional[Tuple[float, float]]:
+    """``(self_w, nb_w)`` if the mixing matrix IS a uniform ring, else None.
+
+    The check is structural (against the actual matrix), not by name: a
+    dropout- or fault-degraded graph that started life as ``ring{m}`` no
+    longer matches, and the caller must fall back to the dense lowering.
+    """
+    Lm, m = topology.mixing, topology.m
+    if m < 2:
+        return None
+    self_w, nb_w = float(Lm[0, 0]), float(Lm[0, 1])
+    if nb_w <= 0.0:
+        return None
+    want = np.full((m, m), 0.0)
+    np.fill_diagonal(want, self_w)
+    for i in range(m):
+        want[i, (i + 1) % m] = nb_w
+        want[i, (i - 1) % m] = nb_w
+    return (self_w, nb_w) if np.allclose(Lm, want, atol=1e-12) else None
+
+
+def hypercube_structure(topology: Topology) -> bool:
+    """True iff the mixing matrix is exactly the uniform hypercube lowering."""
+    m = topology.m
+    if m < 2 or (m & (m - 1)):
+        return False
+    bits = m.bit_length() - 1
+    want = np.full((m, m), 0.0)
+    np.fill_diagonal(want, 0.5)
+    w = 1.0 / (2 * bits)
+    for i in range(m):
+        for b in range(bits):
+            want[i, i ^ (1 << b)] = w
+    return bool(np.allclose(topology.mixing, want, atol=1e-12))
 
 
 def make_round_fn(topology: Topology, axis: str = AXIS
                   ) -> Callable[[jax.Array], jax.Array]:
-    """One gossip round for a local (1, d, k) slice under shard_map."""
+    """One gossip round for a local (1, d, k) slice under shard_map.
+
+    Lowering selection is *structural*: ``collective_permute`` shifts are
+    used only when the mixing matrix provably has the ring / hypercube
+    form; any other matrix — including degraded or rewired descendants of a
+    structured graph — takes one ``all_gather`` per round with the exact
+    dense weights.  The dense row weights are materialised in the iterate's
+    dtype at trace time, so f64 runs keep full precision.
+    """
     m = topology.m
-    name = topology.name
-    if name.startswith("ring"):
-        # exact weights read straight from the mixing matrix:
-        self_w = float(topology.mixing[0, 0])
-        nb_w = float(topology.mixing[0, 1])
+    ring_w = ring_structure(topology)
+    if ring_w is not None:
+        self_w, nb_w = ring_w
         if m == 2:
             # fwd and bwd shifts deliver the SAME single neighbour (the
             # adjacency is edge-clamped), so use one permute or the
@@ -75,10 +121,10 @@ def make_round_fn(topology: Topology, axis: str = AXIS
             return lambda x: self_w * x + nb_w * jax.lax.ppermute(
                 x, axis, [(0, 1), (1, 0)])
         return lambda x: _ring_round(x, m, axis, self_w, nb_w)
-    if name.startswith("hypercube"):
+    if hypercube_structure(topology):
         return lambda x: _hypercube_round(x, m, axis)
-    L = jnp.asarray(topology.mixing, dtype=jnp.float32)
-    return lambda x: _dense_round(x, L, axis)
+    Lnp = topology.mixing                       # keep the f64 source of truth
+    return lambda x: _dense_round(x, jnp.asarray(Lnp, x.dtype), axis)
 
 
 def fastmix_local(x: jax.Array, round_fn, eta: float, K: int) -> jax.Array:
@@ -102,10 +148,21 @@ class DistributedDeEPCA:
     compressed trainer all share one consensus implementation; pass
     ``engine=`` to override (e.g. a ``variant="naive"`` baseline).
 
+    The runtime survives mid-run topology swaps: :meth:`swap_topology`
+    replaces the gossip graph between iterations (same ``m`` — the mesh is
+    fixed), and :meth:`run` accepts a
+    :class:`~repro.core.schedule.TopologySchedule` to drive swaps per step.
+    Graphs whose mixing matrix still has the ring/hypercube structure keep
+    the ``collective_permute`` lowering (one jitted step per such graph);
+    everything else shares ONE dense jitted step that takes the mixing
+    matrix and FastMix momentum as replicated *operands*, so arbitrary
+    rewiring never retraces.
+
     Usage::
 
         dd = DistributedDeEPCA(mesh, topology, k=8, K=6, T=30)
         W = dd.run(A_sharded, W0)     # A_sharded: (m, d, d) sharded on axis 0
+        W = dd.run(A_sharded, W0, schedule=sched)   # time-varying gossip
     """
 
     mesh: Mesh
@@ -115,6 +172,8 @@ class DistributedDeEPCA:
     T: int
     axis: str = AXIS
     engine: Optional[ConsensusEngine] = None
+    _step_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False)
 
     def __post_init__(self):
         if self.mesh.shape[self.axis] != self.topology.m:
@@ -126,24 +185,36 @@ class DistributedDeEPCA:
                 "deepca", self.topology, K=self.K, backend="shard_map",
                 mesh=self.mesh, axis=self.axis)
 
+    def swap_topology(self, topology: Topology) -> None:
+        """Replace the gossip graph between iterations (``m`` must match)."""
+        if topology.m != self.mesh.shape[self.axis]:
+            raise ValueError(
+                f"cannot swap to {topology.name}: m={topology.m} != mesh "
+                f"axis {self.axis}={self.mesh.shape[self.axis]}")
+        # identity check by content, not name: a user schedule may reuse one
+        # name for different graphs, and a stale engine would gossip with
+        # the wrong eta/matrix
+        if topology is self.topology or np.array_equal(
+                topology.mixing, self.topology.mixing):
+            return
+        self.topology = topology
+        self.engine = dataclasses.replace(self.engine, topology=topology)
+
     # -- one full power iteration on local slices -------------------------
-    def _local_step(self, A, S, W, G_prev, W0):
-        # A: (1, d, d) | (1, n, d);  S, W, G_prev: (1, d, k)
+    @staticmethod
+    def _local_power(A, W):
+        # A: (1, d, d) | (1, n, d);  W: (1, d, k)
         if A.shape[-2] == A.shape[-1] and A.ndim == 3:
-            G = jnp.einsum("mde,mek->mdk", A, W)
-        else:
-            XW = jnp.einsum("mnd,mdk->mnk", A, W)
-            G = jnp.einsum("mnd,mnk->mdk", A, XW)
-        S_new = S + G - G_prev                      # subspace tracking
-        S_new = self.engine.local_mix(S_new, axis=self.axis)
-        q, _ = jnp.linalg.qr(S_new[0])
-        W_new = sign_adjust(q, W0)[None]
-        return S_new, W_new, G
+            return jnp.einsum("mde,mek->mdk", A, W)
+        XW = jnp.einsum("mnd,mdk->mnk", A, W)
+        return jnp.einsum("mnd,mnk->mdk", A, XW)
 
     def step_fn(self):
+        """Jitted step for the CURRENT topology (structured lowering path)."""
         spec_a = P(self.axis)          # operators sharded over agents
         spec_v = P(self.axis)          # iterates sharded over agents
         spec_r = P()                   # replicated W0
+        engine = self.engine
 
         @functools.partial(
             shard_map, mesh=self.mesh,
@@ -151,11 +222,68 @@ class DistributedDeEPCA:
             out_specs=(spec_v, spec_v, spec_v),
             check_vma=False)
         def _step(A, S, W, G_prev, W0):
-            return self._local_step(A, S, W, G_prev, W0)
+            G = self._local_power(A, W)
+            S_new = S + G - G_prev                  # subspace tracking
+            S_new = engine.local_mix(S_new, axis=self.axis)
+            q, _ = jnp.linalg.qr(S_new[0])
+            W_new = sign_adjust(q, W0)[None]
+            return S_new, W_new, G
 
         return jax.jit(_step)
 
-    def run(self, A: jax.Array, W0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    def _dense_step_fn(self):
+        """One jitted step shared by ALL dense-lowered topologies.
+
+        ``L`` (replicated ``(m, m)``) and ``eta`` are traced operands:
+        swapping to any other same-``m`` dense graph reuses the compiled
+        step — the heart of the no-retrace contract for dynamic topologies.
+        """
+        spec_v = P(self.axis)
+        K, axis = self.K, self.axis
+
+        @functools.partial(
+            shard_map, mesh=self.mesh,
+            in_specs=(P(self.axis), spec_v, spec_v, spec_v, P(), P(), P()),
+            out_specs=(spec_v, spec_v, spec_v),
+            check_vma=False)
+        def _step(A, S, W, G_prev, W0, L, eta):
+            G = self._local_power(A, W)
+            S_new = S + G - G_prev
+            S_new = fastmix_local(
+                S_new, lambda y: _dense_round(y, L, axis), eta, K)
+            q, _ = jnp.linalg.qr(S_new[0])
+            W_new = sign_adjust(q, W0)[None]
+            return S_new, W_new, G
+
+        return jax.jit(_step)
+
+    def _step_for(self, topology: Topology):
+        """(step_fn, extra_operands) for one topology, cached by lowering."""
+        structured = (ring_structure(topology) is not None
+                      or hypercube_structure(topology))
+        if structured:
+            # keyed by object identity (schedules memoize per step), so two
+            # same-named but different graphs never share a compiled step
+            key = ("structured", topology.name, id(topology))
+            self.swap_topology(topology)
+            fn = self._step_cache.get(key)
+            if fn is None:
+                fn = self._step_cache[key] = self.step_fn()
+            return fn, ()
+        key = ("dense",)
+        fn = self._step_cache.get(key)
+        if fn is None:
+            fn = self._step_cache[key] = self._dense_step_fn()
+        self.swap_topology(topology)
+        # default-dtype materialisation: f64 when x64 is enabled, f32
+        # otherwise — matches the iterate dtype the dense round casts to
+        L = jnp.asarray(topology.mixing)
+        eta = jnp.asarray(self.engine.eta)
+        return fn, (L, eta)
+
+    def run(self, A: jax.Array, W0: jax.Array,
+            schedule: Optional["TopologySchedule"] = None
+            ) -> Tuple[jax.Array, jax.Array]:
         """Runs T power iterations; returns (W_stack, S_stack)."""
         m, d = self.topology.m, W0.shape[0]
         shard = NamedSharding(self.mesh, P(self.axis))
@@ -166,7 +294,15 @@ class DistributedDeEPCA:
         G_prev = W_stack
         W0 = jax.device_put(W0, rep)
         A = jax.device_put(A, shard)
-        step = self.step_fn()
-        for _ in range(self.T):
-            S, W_stack, G_prev = step(A, S, W_stack, G_prev, W0)
+        if schedule is None:
+            step = self.step_fn()
+            for _ in range(self.T):
+                S, W_stack, G_prev = step(A, S, W_stack, G_prev, W0)
+            return W_stack, S
+        if schedule.constant_m(0, self.T) != m:
+            raise ValueError(
+                f"schedule {schedule.name!r} has m != mesh size {m}")
+        for t in range(self.T):
+            step, extra = self._step_for(schedule.topology_at(t))
+            S, W_stack, G_prev = step(A, S, W_stack, G_prev, W0, *extra)
         return W_stack, S

@@ -63,11 +63,24 @@ def _finalize(name: str, adj: np.ndarray) -> Topology:
     if not np.array_equal(adj, adj.T):
         raise ValueError("adjacency must be symmetric (undirected graph)")
     mixing = _mixing_from_adjacency(adj)
-    eig = np.linalg.eigvalsh(mixing)
-    # eigenvalues ascending; top is 1 (the consensus eigenvector)
-    lambda2 = float(eig[-2]) if adj.shape[0] > 1 else 0.0
+    # every constructed topology passes the Section 2.2 conditions at build
+    # time, so a bad matrix fails loudly here instead of silently degrading
+    # the gossip contraction downstream
+    diag = validate_mixing(mixing)
+    lambda2 = diag["lambda2"]
     degree = int(adj.sum(axis=1).max()) if adj.shape[0] > 1 else 0
     return Topology(name=name, mixing=mixing, lambda2=lambda2, degree=degree)
+
+
+def from_adjacency(name: str, adj: np.ndarray) -> Topology:
+    """Build a validated :class:`Topology` from a (weighted) adjacency matrix.
+
+    Applies the paper's construction ``L = I - M / lambda_max(M)`` and the
+    Section 2.2 validity checks.  This is the entry point dynamic-topology
+    helpers (edge dropout, rewiring, fault degradation) use to turn a
+    perturbed graph back into a proper mixing matrix.
+    """
+    return _finalize(name, np.asarray(adj, dtype=np.float64))
 
 
 def ring(m: int) -> Topology:
@@ -114,15 +127,21 @@ def complete(m: int) -> Topology:
 
 def erdos_renyi(m: int, p: float = 0.5, seed: int = 0,
                 ensure_connected: bool = True) -> Topology:
-    """The paper's experimental topology (Section 5: m=50, p=0.5)."""
-    rng = np.random.default_rng(seed)
+    """The paper's experimental topology (Section 5: m=50, p=0.5).
+
+    The recorded name always carries the seed that *reproduces* the graph:
+    each connectivity retry re-seeds the generator with ``seed + attempt``,
+    so ``erdos_renyi(m, p, seed=s)`` with the ``s`` parsed from
+    ``Topology.name`` round-trips to the identical adjacency.
+    """
     for attempt in range(1000):
+        s = seed + attempt
+        rng = np.random.default_rng(s)
         upper = rng.random((m, m)) < p
         adj = np.triu(upper, k=1).astype(np.float64)
         adj = adj + adj.T
         if not ensure_connected or _is_connected(adj):
-            return _finalize(f"er{m}_p{p}_s{seed}", adj)
-        seed += 1
+            return _finalize(f"er{m}_p{p}_s{s}", adj)
     raise RuntimeError("could not sample a connected Erdos-Renyi graph")
 
 
@@ -163,7 +182,14 @@ def make_topology(name: str, m: int, **kw) -> Topology:
 
 
 def validate_mixing(L: np.ndarray, atol: float = 1e-8) -> Dict[str, float]:
-    """Check the paper's Section 2.2 conditions; returns diagnostics."""
+    """Check the paper's Section 2.2 conditions; returns diagnostics.
+
+    Raises :class:`ValueError` (NOT ``assert``, which ``python -O`` strips)
+    when a condition fails, so invalid matrices are rejected even in
+    assertions-off deployments.  Called from every topology construction via
+    ``_finalize``; callers holding a hand-built matrix can invoke it
+    directly.
+    """
     m = L.shape[0]
     ones = np.ones(m)
     eig = np.linalg.eigvalsh(L)
@@ -174,8 +200,13 @@ def validate_mixing(L: np.ndarray, atol: float = 1e-8) -> Dict[str, float]:
         "max_eig": float(eig[-1]),
         "lambda2": float(eig[-2]) if m > 1 else 0.0,
     }
-    assert diag["symmetry"] < atol, "mixing matrix must be symmetric"
-    assert diag["row_sum_err"] < 1e-6, "mixing matrix must be doubly stochastic"
-    assert diag["min_eig"] > -1e-8, "mixing matrix must be PSD (0 <= L)"
-    assert diag["max_eig"] < 1.0 + 1e-8, "mixing matrix must satisfy L <= I"
+    checks = (
+        (diag["symmetry"] < atol, "mixing matrix must be symmetric"),
+        (diag["row_sum_err"] < 1e-6, "mixing matrix must be doubly stochastic"),
+        (diag["min_eig"] > -1e-8, "mixing matrix must be PSD (0 <= L)"),
+        (diag["max_eig"] < 1.0 + 1e-8, "mixing matrix must satisfy L <= I"),
+    )
+    for ok, msg in checks:
+        if not ok:
+            raise ValueError(f"{msg}; diagnostics: {diag}")
     return diag

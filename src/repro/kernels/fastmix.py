@@ -35,14 +35,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
-def _fastmix_kernel(l_ref, x_ref, o_ref, *, eta: float, K: int):
+def _fastmix_kernel(eta_ref, l_ref, x_ref, o_ref, *, K: int):
     """One column tile: run all K rounds with prev/cur resident in VMEM."""
+    eta = eta_ref[0, 0]
     L = l_ref[...]
     prev = x_ref[...].astype(jnp.float32)
     cur = prev
@@ -54,18 +56,20 @@ def _fastmix_kernel(l_ref, x_ref, o_ref, *, eta: float, K: int):
     o_ref[...] = cur
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("eta", "K", "block_n", "interpret"))
-def fastmix_fused(S: jax.Array, L: jax.Array, eta: float, K: int, *,
+@functools.partial(jax.jit, static_argnames=("K", "block_n", "interpret"))
+def fastmix_fused(S: jax.Array, L: jax.Array, eta, K: int, *,
                   block_n: int = 512, interpret: bool = False) -> jax.Array:
     """All K FastMix rounds in one Pallas launch.
 
     Args:
       S: ``(m, ...)`` stacked agent variables (trailing dims are flattened
          into one column axis internally).
-      L: ``(m, m)`` symmetric doubly-stochastic mixing matrix.
-      eta: FastMix momentum (static; ``eta=0.0`` degenerates to fused naive
-         gossip ``L^K S``).
+      L: ``(m, m)`` symmetric doubly-stochastic mixing matrix.  Both ``L``
+         and ``eta`` are *traced* operands (``eta`` rides in SMEM), so the
+         jit/kernel cache is keyed on shape only — time-varying topologies
+         swap mixing matrices without retracing or recompiling.
+      eta: FastMix momentum (``eta=0.0`` degenerates to fused naive gossip
+         ``L^K S``).
       K: number of gossip rounds (static, unrolled inside the kernel).
     Returns:
       ``(m, ...)`` mixed variables in fp32, same logical shape as ``S``.
@@ -87,18 +91,21 @@ def fastmix_fused(S: jax.Array, L: jax.Array, eta: float, K: int, *,
     npad = _round_up(n, bn)
     l_p = jnp.pad(L.astype(jnp.float32), ((0, mp - m), (0, mp - m)))
     x_p = jnp.pad(x, ((0, mp - m), (0, npad - n)))
+    eta_p = jnp.asarray(eta, jnp.float32).reshape(1, 1)
 
     out = pl.pallas_call(
-        functools.partial(_fastmix_kernel, eta=float(eta), K=int(K)),
+        functools.partial(_fastmix_kernel, K=int(K)),
         grid=(npad // bn,),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda j: (0, 0),
+                         memory_space=pltpu.SMEM),      # eta: traced scalar
             pl.BlockSpec((mp, mp), lambda j: (0, 0)),   # L: resident
             pl.BlockSpec((mp, bn), lambda j: (0, j)),   # S tile: read once
         ],
         out_specs=pl.BlockSpec((mp, bn), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((mp, npad), jnp.float32),
         interpret=interpret,
-    )(l_p, x_p)
+    )(eta_p, l_p, x_p)
     return out[:m, :n].reshape(S.shape)
 
 

@@ -1,1 +1,4 @@
-from .fault_tolerance import ResilientLoop, StragglerMonitor, degrade_topology
+from .fault_tolerance import (AgentFailure, DisconnectedTopologyError,
+                              ResilientLoop, StragglerMonitor,
+                              deepca_with_failures, degrade_topology,
+                              kill_agents)

@@ -95,14 +95,157 @@ class ResilientLoop:
         return state
 
 
-def degrade_topology(mixing_row_drop: "np.ndarray", dead: List[int]):
-    """Drop dead agents from a gossip matrix and renormalize (Remark 3)."""
+class DisconnectedTopologyError(RuntimeError):
+    """Survivor graph is disconnected: gossip cannot reach global consensus.
+
+    With ``lambda2 = 1`` the spectral gap is zero, ``fastmix_eta``
+    degenerates to 1 and FastMix stops contracting — silently, unless this
+    is raised.  Callers that can live with per-component consensus pass
+    ``allow_disconnected=True`` to :func:`degrade_topology` and must inspect
+    ``Topology.spectral_gap`` themselves.
+    """
+
+
+def degrade_topology(mixing, dead: List[int], *,
+                     allow_disconnected: bool = False):
+    """Drop dead agents from a gossip matrix and renormalize (Remark 3).
+
+    Args:
+      mixing: the ``(m, m)`` mixing matrix of the pre-failure topology (a
+        :class:`~repro.core.topology.Topology` is also accepted).
+      dead: indices of failed agents (in the pre-failure numbering).
+      allow_disconnected: when the survivor graph is disconnected, return
+        the (non-contracting) topology instead of raising
+        :class:`DisconnectedTopologyError`.
+
+    The surviving *weighted adjacency* is the off-diagonal block of the
+    mixing matrix restricted to survivors: ``L_ij`` is proportional to the
+    edge weight ``a_ij`` for ``i != j`` (the paper's ``L = I - M /
+    lambda_max(M)`` construction), and the proportionality constant cancels
+    when the construction is re-applied.  The diagonal is discarded — it
+    encodes degrees of the *old* graph (and may be zero or negative), which
+    is what the previous ``L > 0`` binarization got wrong.
+    """
     import numpy as np
-    L = np.array(mixing_row_drop, dtype=np.float64)
-    keep = [i for i in range(L.shape[0]) if i not in set(dead)]
-    L = L[np.ix_(keep, keep)]
-    # re-apply the paper's construction on the surviving subgraph
-    adj = (L > 0).astype(np.float64)
+    from repro.core.topology import _is_connected, from_adjacency
+
+    base_name = getattr(mixing, "name", None)
+    L = np.array(getattr(mixing, "mixing", mixing), dtype=np.float64)
+    m = L.shape[0]
+    keep = [i for i in range(m) if i not in set(dead)]
+    if not keep:
+        raise ValueError("cannot degrade: every agent is dead")
+    adj = L[np.ix_(keep, keep)].copy()
     np.fill_diagonal(adj, 0.0)
-    from repro.core.topology import _finalize
-    return _finalize(f"degraded{len(keep)}", adj)
+    adj[adj < 0] = 0.0            # round-off guard; true weights are >= 0
+    name = (f"degraded{len(keep)}of{m}"
+            + (f"[{base_name}]" if base_name else ""))
+    if not _is_connected(adj) and not allow_disconnected:
+        raise DisconnectedTopologyError(
+            f"{name}: dropping agents {sorted(set(dead))} disconnects "
+            f"the gossip graph; consensus would not contract")
+    # for an allowed disconnected survivor, lambda2 == 1 (zero spectral
+    # gap) flags the non-contracting graph to callers
+    return from_adjacency(name, adj)
+
+
+def kill_agents(ops, state, dead: List[int]):
+    """Restrict a stacked DeEPCA run to the survivors of an agent failure.
+
+    Returns ``(ops_surv, state_surv)`` where the operators and the
+    resumable ``(S, W, G_prev, offset)`` state keep only surviving rows.
+    The subspace tracker is *restarted* on the survivor population:
+    ``S := G_prev := A_j W_j`` so the Lemma 2 invariant ``mean(S) ==
+    mean(G)`` holds exactly over the survivors — carrying the old ``S``
+    across the failure would freeze the (now unbalanced) mean mismatch into
+    a permanent bias floor.
+    """
+    import jax.numpy as jnp
+    from repro.core.operators import StackedOperators
+
+    m = ops.m
+    keep = jnp.asarray([i for i in range(m) if i not in set(dead)])
+    if ops.dense is not None:
+        ops_surv = StackedOperators(dense=ops.dense[keep])
+    else:
+        ops_surv = StackedOperators(data=ops.data[keep])
+    S, W, G_prev = state[0], state[1], state[2]
+    offset = state[3] if len(state) > 3 else None
+    W_surv = W[keep]
+    G0 = ops_surv.apply(W_surv)
+    state_surv = (G0, W_surv, G0) + (() if offset is None else (offset,))
+    return ops_surv, state_surv
+
+
+@dataclasses.dataclass
+class AgentFailure:
+    """An injected failure: agents ``dead`` die before iteration ``at_iter``.
+
+    ``dead`` indices refer to the numbering *current at that point of the
+    run* (i.e. after earlier failures have already compacted the stack).
+    """
+
+    at_iter: int
+    dead: List[int]
+
+
+def deepca_with_failures(ops, topology, W0, *, k: int, T: int, K: int,
+                         failures: List[AgentFailure], U=None,
+                         backend: str = "auto", ckpt_dir: Optional[str] = None,
+                         allow_disconnected: bool = False) -> Dict[str, Any]:
+    """ResilientLoop scenario: DeEPCA that survives mid-run agent deaths.
+
+    Runs stacked DeEPCA in segments between failures.  At each failure the
+    gossip graph is degraded with :func:`degrade_topology` (raising if the
+    survivors disconnect), the run state is compacted with
+    :func:`kill_agents`, and the run resumes from the carried state — round
+    accounting continues across segments via the offset in ``state``.  When
+    ``ckpt_dir`` is given every segment boundary is checkpointed through
+    the async checkpointer (the same machinery :class:`ResilientLoop`
+    uses); a supervisor can restore the latest segment state with
+    :func:`repro.checkpoint.restore` and resume via ``deepca(state=...)``
+    (this function itself always runs the scenario from the start).
+
+    Returns a dict with the final ``result`` (survivor-population
+    diagnostics in its trace), the per-segment results, the surviving
+    topology and the survivor count.
+    """
+    from repro.core.algorithms import deepca
+    from repro.core.operators import top_k_eigvecs
+
+    ckpt = AsyncCheckpointer(ckpt_dir, keep=2) if ckpt_dir else None
+    events = sorted(failures, key=lambda f: f.at_iter)
+    if any(f.at_iter <= 0 or f.at_iter >= T for f in events):
+        raise ValueError("failure at_iter must fall strictly inside (0, T)")
+
+    segments, results = [], []
+    prev = 0
+    for f in events:
+        segments.append((f.at_iter - prev, f))
+        prev = f.at_iter
+    segments.append((T - prev, None))
+
+    state = None
+    topo = topology
+    U_cur = U
+    for seg_idx, (seg_T, failure) in enumerate(segments):
+        if U_cur is None:
+            # ground truth follows the surviving population's mean operator
+            U_cur, _ = top_k_eigvecs(ops.mean_matrix(), k)
+        res = deepca(ops, topo, W0, k=k, T=seg_T, K=K, U=U_cur,
+                     backend=backend, state=state)
+        results.append(res)
+        state = res.state
+        if ckpt is not None:
+            ckpt.save_async(seg_idx + 1, {"S": state[0], "W": state[1],
+                                          "G_prev": state[2],
+                                          "offset": state[3]})
+        if failure is not None:
+            topo = degrade_topology(topo, failure.dead,
+                                    allow_disconnected=allow_disconnected)
+            ops, state = kill_agents(ops, state, failure.dead)
+            U_cur = None        # survivor mean changed: recompute next segment
+    if ckpt is not None:
+        ckpt.wait()
+    return {"result": results[-1], "segments": results, "topology": topo,
+            "survivors": ops.m}

@@ -171,6 +171,22 @@ _SCRIPT = textwrap.dedent("""
     err2 = float(jnp.max(jnp.abs(out2 - ref2)))
     assert err2 < 1e-5, ("ring2", err2)
     print("OK ring2")
+
+    # x64: the dense all_gather round must keep f64 parity with the stacked
+    # reference (regression: L was hard-cast to float32 in make_round_fn)
+    jax.config.update("jax_enable_x64", True)
+    topo64 = erdos_renyi(8, p=0.6, seed=4)
+    mesh8 = Mesh(np.asarray(jax.devices()[:8]), ("agents",))
+    S64 = jnp.asarray(rng.standard_normal((8, 16, 3)), jnp.float64)
+    ref64 = ConsensusEngine(topo64, K=6, backend="stacked").mix(S64)
+    shm64 = ConsensusEngine(topo64, K=6, backend="shard_map",
+                            mesh=mesh8).mix(S64)
+    err64 = float(jnp.max(jnp.abs(shm64 - ref64)))
+    assert err64 < 1e-12, ("x64 dense round", err64)
+    poly64 = ConsensusEngine(topo64, K=6, backend="pallas").mix(S64)
+    perr64 = float(jnp.max(jnp.abs(poly64 - ref64)))
+    assert perr64 < 1e-12, ("x64 poly", perr64)
+    print("OK x64")
     print("ALLOK")
 """)
 

@@ -179,3 +179,50 @@ def test_degraded_topology_still_mixes():
     assert degraded.m == 10
     validate_mixing(degraded.mixing)
     assert degraded.spectral_gap > 0.0
+
+
+def test_degrade_topology_preserves_edge_weights():
+    """Regression: the old ``L > 0`` binarization flattened weighted graphs."""
+    from repro.core import from_adjacency
+    adj = np.zeros((5, 5))
+    edges = {(0, 1): 1.0, (1, 2): 2.0, (2, 3): 0.5, (3, 4): 1.5, (4, 0): 3.0,
+             (1, 3): 0.25}
+    for (i, j), w in edges.items():
+        adj[i, j] = adj[j, i] = w
+    topo = from_adjacency("weighted5", adj)
+    degraded = degrade_topology(topo, dead=[4])
+    # surviving construction == rebuilding directly from the surviving
+    # weighted adjacency (weights survive the round-trip through L)
+    want = from_adjacency("ref", adj[np.ix_([0, 1, 2, 3], [0, 1, 2, 3])])
+    np.testing.assert_allclose(degraded.mixing, want.mixing, atol=1e-12)
+
+
+def test_degrade_topology_disconnected_raises_or_flags():
+    from repro.core import ring
+    from repro.runtime import DisconnectedTopologyError
+    # removing two opposite ring agents cuts the cycle into two arcs
+    with pytest.raises(DisconnectedTopologyError):
+        degrade_topology(ring(8), dead=[0, 4])
+    flagged = degrade_topology(ring(8), dead=[0, 4], allow_disconnected=True)
+    assert flagged.m == 6
+    assert flagged.spectral_gap <= 1e-9      # lambda2 == 1: zero gap exposed
+
+
+def test_deepca_with_failures_keeps_converging(tmp_path):
+    from repro.core import erdos_renyi, synthetic_spiked
+    from repro.runtime import AgentFailure, deepca_with_failures
+    import jax.numpy as jnp
+    ops = synthetic_spiked(10, 16, 2, n_per_agent=32, seed=0)
+    rng = np.random.default_rng(1)
+    W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((16, 2)))[0],
+                     jnp.float32)
+    topo = erdos_renyi(10, p=0.5, seed=2)
+    out = deepca_with_failures(
+        ops, topo, W0, k=2, T=60, K=6,
+        failures=[AgentFailure(at_iter=15, dead=[3]),
+                  AgentFailure(at_iter=35, dead=[0, 5])],
+        backend="stacked", ckpt_dir=str(tmp_path / "ck"))
+    assert out["survivors"] == 7
+    assert float(out["result"].trace.mean_tan_theta[-1]) < 1e-3
+    # round accounting continued across both failures
+    assert float(out["result"].trace.comm_rounds[-1]) == 60 * 6
