@@ -1,15 +1,20 @@
 """FastMix benchmarks: Prop. 1 validation + ConsensusEngine backend sweep.
 
-Three entry points:
+Four entry points:
 
 * :func:`main` (used by ``benchmarks.run``) — FastMix vs naive gossip
   contraction rates, measured vs theoretical, across topologies.
 * :func:`sweep_backends` (``python benchmarks/bench_mixing.py --sweep``) —
   times the engine's three gossip backends (per-round ``stacked``, fused
-  ``pallas`` kernel/polynomial, ``shard_map`` collectives) over an
-  (m, d, k, K) grid and emits a comparison table with the fused-vs-stacked
-  speedup per config.  Run with ``--sweep`` so fake host devices are set up
-  before jax initialises and the shard_map rows can execute on CPU.
+  ``pallas`` kernel/polynomial, ``shard_map`` collectives) over a
+  (topology, m, d, k, K) grid spanning ring / Erdős–Rényi / torus graphs up
+  to m=64, and emits a comparison table with the fused-vs-stacked speedup
+  per config.  Run with ``--sweep`` so fake host devices are set up before
+  jax initialises and the shard_map rows can execute on CPU.
+* :func:`sweep_batched` (``--batched``) — the multi-problem serving column:
+  times ``IterationDriver.run_batch`` (one compiled vmap-over-problems
+  launch) against B sequential driver runs of the same problems and
+  reports problems/s plus the batched speedup.
 * :func:`sweep_degraded` (``--degraded``) — the fleet-robustness table:
   sweeps dead-agent counts x per-round edge-dropout rates over
   ring/hypercube/er graphs, reporting the surviving spectral gap, the
@@ -18,14 +23,19 @@ Three entry points:
   whose survivor graph disconnects are reported as such (gossip cannot
   contract there — the failure mode ``degrade_topology`` now refuses to
   hide).
+
+``--json PATH`` writes every produced row to a JSON file (the CI workflow
+uploads it as a build artifact); ``--quick`` shrinks grids/reps for CI.
 """
 from __future__ import annotations
 
 import csv
+import json
 import os
 import sys
 
-if __name__ == "__main__" and "--sweep" in sys.argv:
+if __name__ == "__main__" and ("--sweep" in sys.argv
+                               or "--batched" in sys.argv):
     # must happen before the first jax backend initialisation; append so a
     # pre-existing XLA_FLAGS doesn't silently drop the fake devices (an
     # explicit --xla_force_host_platform_device_count in it still wins)
@@ -51,16 +61,44 @@ TOPOLOGIES = [
     ("hypercube256", lambda: hypercube(256)),
 ]
 
-# (m, d, k, K) grid for the backend sweep; the (16, 1024, 8, 8) point is the
-# acceptance config tracked in CHANGES.md / the PR table.
+# (topology, m, d, k, K) grid for the backend sweep; the ring (16, 1024,
+# 8, 8) point is the acceptance config tracked in CHANGES.md / the PR
+# table.  er/torus rows and the m=64 points cover the roadmap's "grow the
+# grid" item (torus is the TPU-fabric-shaped graph; er is the paper's
+# setting).  m=64 exceeds the 16 fake host devices, so those shard_map
+# cells report as skipped off-pod.
 SWEEP_CONFIGS = [
-    (8, 256, 8, 4),
-    (8, 1024, 8, 8),
-    (16, 256, 8, 4),
-    (16, 1024, 8, 4),
-    (16, 1024, 8, 8),
-    (16, 4096, 8, 8),
+    ("ring", 8, 256, 8, 4),
+    ("ring", 8, 1024, 8, 8),
+    ("ring", 16, 256, 8, 4),
+    ("ring", 16, 1024, 8, 4),
+    ("ring", 16, 1024, 8, 8),
+    ("ring", 16, 4096, 8, 8),
+    ("er", 16, 1024, 8, 8),
+    ("torus", 16, 1024, 8, 8),
+    ("ring", 64, 1024, 8, 8),
+    ("er", 64, 1024, 8, 8),
+    ("torus", 64, 1024, 8, 8),
 ]
+
+QUICK_SWEEP_CONFIGS = [
+    ("ring", 8, 256, 8, 4),
+    ("er", 16, 256, 8, 4),
+    ("torus", 16, 256, 8, 4),
+]
+
+
+def _sweep_topology(kind: str, m: int):
+    if kind == "ring":
+        return ring(m)
+    if kind == "er":
+        return erdos_renyi(m, p=0.5, seed=0)
+    if kind == "torus":
+        side = int(round(m ** 0.5))
+        if side * side != m:
+            raise ValueError(f"torus sweep point needs square m, got {m}")
+        return torus2d(side, side)
+    raise ValueError(f"unknown sweep topology kind {kind!r}")
 
 
 def main(writer=None) -> None:
@@ -127,15 +165,15 @@ def _backend_fns(topo, S, K):
 
 def sweep_backends(writer=None, configs=SWEEP_CONFIGS, reps: int = 100,
                    markdown: bool = False):
-    """Time every gossip backend over the (m, d, k, K) grid."""
+    """Time every gossip backend over the (topology, m, d, k, K) grid."""
     own = writer is None
     if own and not markdown:
         writer = csv.writer(sys.stdout)
         writer.writerow(["name", "us_per_call", "derived"])
     rows = []
     rng = np.random.default_rng(0)
-    for (m, d, k, K) in configs:
-        topo = ring(m)
+    for (kind, m, d, k, K) in configs:
+        topo = _sweep_topology(kind, m)
         S = jnp.asarray(rng.standard_normal((m, d, k)), jnp.float32)
         fns = _backend_fns(topo, S, K)
         timings = {}
@@ -147,7 +185,7 @@ def sweep_backends(writer=None, configs=SWEEP_CONFIGS, reps: int = 100,
                     f"mixing_backend/{topo.name}/d{d}k{k}K{K}/{backend}",
                     f"{us:.1f}", flavour])
         speedup = timings["stacked"][1] / timings["pallas-fused"][1]
-        rows.append(((m, d, k, K), timings, speedup))
+        rows.append(((topo.name, m, d, k, K), timings, speedup))
     if markdown:
         _print_markdown(rows)
     return rows
@@ -156,20 +194,124 @@ def sweep_backends(writer=None, configs=SWEEP_CONFIGS, reps: int = 100,
 def _print_markdown(rows) -> None:
     host = jax.default_backend()
     print(f"\n### FastMix backend sweep (host backend: {host}, "
-          f"{len(jax.devices())} devices, ring topology)\n")
-    print("| m | d | k | K | stacked (per-round) | pallas-fused | "
+          f"{len(jax.devices())} devices)\n")
+    print("| topology | m | d | k | K | stacked (per-round) | pallas-fused | "
           "shard_map | fused speedup |")
-    print("|---|---|---|---|---------------------|--------------|"
+    print("|----------|---|---|---|---|---------------------|--------------|"
           "-----------|---------------|")
-    for (m, d, k, K), t, speedup in rows:
+    for (name, m, d, k, K), t, speedup in rows:
         def cell(b):
             flavour, us = t[b]
             if us != us:                      # NaN -> unavailable
                 return flavour
             return f"{us:.0f} µs ({flavour})"
-        print(f"| {m} | {d} | {k} | {K} | {cell('stacked')} | "
+        print(f"| {name} | {m} | {d} | {k} | {K} | {cell('stacked')} | "
               f"{cell('pallas-fused')} | {cell('shard_map')} | "
               f"**{speedup:.2f}×** |")
+
+
+# ---------------------------------------------------------- batched sweep
+
+# (B, m, d, k, T, K) grid for run_batch vs sequential driver runs; the
+# (8, ...) row is the acceptance config ("run_batch(B=8) beats 8 sequential
+# driver runs on the CPU bench host").
+BATCHED_CONFIGS = [
+    (4, 8, 256, 4, 20, 5),
+    (8, 16, 256, 4, 20, 6),
+    (8, 16, 1024, 8, 20, 6),
+    (16, 16, 256, 4, 20, 6),
+]
+
+QUICK_BATCHED_CONFIGS = [
+    (4, 8, 64, 3, 10, 4),
+    (8, 8, 64, 3, 10, 4),
+]
+
+
+def sweep_batched(writer=None, configs=BATCHED_CONFIGS, reps: int = 10,
+                  markdown: bool = False):
+    """run_batch (one vmapped launch) vs B sequential driver runs."""
+    import time
+
+    from repro.core import (ConsensusEngine, IterationDriver, PowerStep,
+                            synthetic_problem_batch)
+
+    own = writer is None
+    if own and not markdown:
+        writer = csv.writer(sys.stdout)
+        writer.writerow(["name", "us_per_call", "derived"])
+    rows = []
+    for (B, m, d, k, T, K) in configs:
+        topo = erdos_renyi(m, p=0.5, seed=0)
+        problems, W0 = synthetic_problem_batch(B, m, d, k, n_per_agent=32,
+                                               seed=0)
+        driver = IterationDriver(
+            step=PowerStep.for_algorithm("deepca", K),
+            engine=ConsensusEngine.for_algorithm(
+                "deepca", topo, K=K, backend="stacked"))
+
+        jax.block_until_ready(driver.run_batch(problems, W0, T=T).W)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(driver.run_batch(problems, W0, T=T).W)
+        batch_us = (time.perf_counter() - t0) / reps * 1e6
+
+        # baseline 1 — warm driver: repeated run() calls on ONE driver hit
+        # its jitted-program cache (per-(T, kind); added with run_batch)
+        for p, w in zip(problems, W0):          # warm per-problem paths
+            jax.block_until_ready(driver.run(p, w, T=T).carry[1])
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for p, w in zip(problems, W0):
+                jax.block_until_ready(driver.run(p, w, T=T).carry[1])
+        warm_us = (time.perf_counter() - t0) / reps * 1e6
+
+        # baseline 2 — fresh driver per request (B independent driver
+        # runs, the deepca()-per-call serving pattern): every run
+        # re-traces its scan, so this measures what run_batch's single
+        # launch actually replaces in a naive server
+        fresh_reps = min(reps, 3)
+        t0 = time.perf_counter()
+        for _ in range(fresh_reps):
+            for p, w in zip(problems, W0):
+                d2 = IterationDriver(
+                    step=PowerStep.for_algorithm("deepca", K),
+                    engine=ConsensusEngine.for_algorithm(
+                        "deepca", topo, K=K, backend="stacked"))
+                jax.block_until_ready(d2.run(p, w, T=T).carry[1])
+        fresh_us = (time.perf_counter() - t0) / fresh_reps * 1e6
+
+        speedup_warm = warm_us / batch_us
+        speedup_fresh = fresh_us / batch_us
+        pps = B / (batch_us / 1e6)
+        if writer is not None:
+            writer.writerow([
+                f"mixing_batched/{topo.name}/B{B}d{d}k{k}T{T}K{K}",
+                f"{batch_us:.1f}",
+                f"seq_warm={warm_us:.1f};seq_fresh={fresh_us:.1f};"
+                f"speedup_vs_warm={speedup_warm:.2f};"
+                f"speedup_vs_fresh={speedup_fresh:.2f};"
+                f"problems_per_s={pps:.1f}"])
+        rows.append(((B, m, d, k, T, K), batch_us, warm_us, fresh_us,
+                     speedup_warm, speedup_fresh, pps))
+    if markdown:
+        _print_batched_markdown(rows)
+    return rows
+
+
+def _print_batched_markdown(rows) -> None:
+    print(f"\n### Batched multi-problem serving (host backend: "
+          f"{jax.default_backend()}; run_batch = one vmapped launch; "
+          "'warm' = one driver's jit cache reused, 'fresh' = driver per "
+          "request)\n")
+    print("| B | m | d | k | T | K | run_batch | B seq (warm) | "
+          "B seq (fresh) | vs warm | vs fresh | problems/s |")
+    print("|---|---|---|---|---|---|-----------|--------------|"
+          "---------------|---------|----------|------------|")
+    for (B, m, d, k, T, K), bus, wus, fus, sw, sf, pps in rows:
+        print(f"| {B} | {m} | {d} | {k} | {T} | {K} | {bus / 1e3:.1f} ms | "
+              f"{wus / 1e3:.1f} ms | {fus / 1e3:.1f} ms | {sw:.2f}× | "
+              f"**{sf:.2f}×** | {pps:.0f} |")
 
 
 # ---------------------------------------------------------- degraded sweep
@@ -253,10 +395,57 @@ def _print_degraded_markdown(rows, m: int, K: int, steps: int) -> None:
               f"{bound:.3e} |")
 
 
+def _arg_value(flag: str, default=None):
+    if flag in sys.argv:
+        return sys.argv[sys.argv.index(flag) + 1]
+    return default
+
+
 if __name__ == "__main__":
+    quick = "--quick" in sys.argv
+    reps = int(_arg_value("--reps", 5 if quick else 0) or 0)
+    report = {"host_backend": jax.default_backend(),
+              "devices": len(jax.devices())}
+    ran_any = False
     if "--sweep" in sys.argv:
-        sweep_backends(writer=None, markdown=True)
-    elif "--degraded" in sys.argv:
-        sweep_degraded(writer=None, markdown=True)
-    else:
+        rows = sweep_backends(
+            writer=None, markdown=True,
+            configs=QUICK_SWEEP_CONFIGS if quick else SWEEP_CONFIGS,
+            reps=reps or 100)
+        report["sweep"] = [
+            {"topology": name, "m": m, "d": d, "k": k, "K": K,
+             # skipped cells carry us=NaN, which is not valid JSON -> null
+             "timings_us": {b: {"flavour": fl,
+                                "us": us if us == us else None}
+                            for b, (fl, us) in t.items()},
+             "fused_speedup": sp}
+            for (name, m, d, k, K), t, sp in rows]
+        ran_any = True
+    if "--batched" in sys.argv:
+        rows = sweep_batched(
+            writer=None, markdown=True,
+            configs=QUICK_BATCHED_CONFIGS if quick else BATCHED_CONFIGS,
+            reps=reps or 10)
+        report["batched"] = [
+            {"B": B, "m": m, "d": d, "k": k, "T": T, "K": K,
+             "run_batch_us": bus, "sequential_warm_us": wus,
+             "sequential_fresh_us": fus, "speedup_vs_warm": sw,
+             "speedup_vs_fresh": sf, "problems_per_s": pps}
+            for (B, m, d, k, T, K), bus, wus, fus, sw, sf, pps in rows]
+        ran_any = True
+    if "--degraded" in sys.argv:
+        rows = sweep_degraded(writer=None, markdown=True)
+        report["degraded"] = [
+            {"topology": name, "dead": nd, "drop": p,
+             "stats": None if stats is None else
+             {"min_gap": stats[0], "measured_contraction": stats[1],
+              "prop1_bound": stats[2], "survivors": stats[3]}}
+            for name, nd, p, stats in rows]
+        ran_any = True
+    if not ran_any:
         main()
+    json_path = _arg_value("--json")
+    if json_path and ran_any:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"\n[json] wrote {json_path}")

@@ -30,3 +30,23 @@ print(f"total communication rounds    = {int(res.trace.comm_rounds[-1])}")
 
 cen = centralized_power_method(ops.mean_matrix(), W0, iters=60, U=U)
 print(f"centralized PCA after 60 iters = {float(cen['tan_theta'][-1]):.2e}")
+
+# 5. serving many PCA problems at once: the driver's batched substrate runs
+#    B independent (ops, W0) problems in ONE compiled vmapped launch
+#    (see `python -m repro.launch.serve --workload pca` for the full server)
+from repro.core import (ConsensusEngine, IterationDriver,  # noqa: E402
+                        PowerStep, synthetic_problem_batch)
+
+B = 4
+problems, W0b = synthetic_problem_batch(B, m, d, k, n_per_agent=80, seed=0)
+driver = IterationDriver(
+    step=PowerStep.for_algorithm("deepca", 6),
+    engine=ConsensusEngine.for_algorithm("deepca", topo, K=6,
+                                         backend="stacked"))
+batch = driver.run_batch(problems, W0b, T=30)
+for b, p in enumerate(problems):
+    Ub, _ = top_k_eigvecs(p.mean_matrix(), k)
+    Wbar = jnp.linalg.qr(jnp.mean(batch.W[b], axis=0))[0]
+    from repro.core import metrics
+    print(f"batched problem {b}: tan theta = "
+          f"{float(metrics.tan_theta_k(Ub, Wbar)):.2e}")

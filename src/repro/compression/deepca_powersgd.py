@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.algorithms import sign_adjust
+from repro.core.step import sign_adjust
+from repro.kernels.fastmix import tracking_update
 from repro.core.mixing import fastmix, fastmix_eta
 from repro.core.topology import Topology
 
@@ -135,7 +136,7 @@ class DeEPCACompressor:
             # local power iterate P_j = G_j Q_j
             P = jnp.einsum("mod,mdr->mor", gm, st.Q)
             # subspace tracking + FastMix (Alg. 1 lines 4-5)
-            S = mix(st.S + P - st.P_prev)
+            S = mix(tracking_update(st.S, P, st.P_prev))
             # local QR + sign adjustment (Alg. 1 line 6 / Alg. 2)
             Phat = jnp.linalg.qr(S)[0]
             Phat = sign_adjust(Phat, Phat[0])

@@ -14,10 +14,11 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.algorithms import sign_adjust
 from repro.core.gossip_shard import fastmix_local, make_round_fn
 from repro.core.mixing import fastmix_eta
+from repro.core.step import sign_adjust
 from repro.core.topology import Topology
+from repro.kernels.fastmix import tracking_update
 
 from .deepca_powersgd import LeafState, compressible
 
@@ -70,7 +71,7 @@ def compress_local(grads: PyTree, state: Dict[str, LeafState], *,
         shp = g.shape
         gm = g.reshape(-1, g.shape[-1]) + st.err
         P = gm @ st.Q
-        S = mix(st.S + P - st.P_prev)
+        S = mix(tracking_update(st.S, P, st.P_prev))
         Phat = jnp.linalg.qr(S)[0]
         Phat = sign_adjust(Phat, jnp.abs(Phat))   # deterministic sign fix
         Q = mix(gm.T @ Phat)

@@ -6,8 +6,10 @@ from .mixing import fastmix, naive_mix, fastmix_eta, consensus_error
 from .consensus import (ConsensusEngine, DynamicConsensusEngine,
                         resolve_backend, BACKENDS, VARIANTS)
 from .schedule import TopologySchedule, adjacency_of
-from .operators import (StackedOperators, synthetic_spiked, libsvm_like,
-                        top_k_eigvecs)
+from .operators import (StackedOperators, synthetic_spiked,
+                        synthetic_problem_batch, libsvm_like, top_k_eigvecs)
+from .step import PowerStep, qr_orth
+from .driver import BatchRun, DriverRun, IterationDriver, local_apply
 from .algorithms import (deepca, depca, centralized_power_method, sign_adjust,
                          DecentralizedPCAResult, PowerTrace,
                          theory_consensus_rounds)
@@ -22,7 +24,10 @@ __all__ = [
     "ConsensusEngine", "DynamicConsensusEngine", "resolve_backend",
     "BACKENDS", "VARIANTS",
     "TopologySchedule", "adjacency_of",
-    "StackedOperators", "synthetic_spiked", "libsvm_like", "top_k_eigvecs",
+    "StackedOperators", "synthetic_spiked", "synthetic_problem_batch",
+    "libsvm_like", "top_k_eigvecs",
+    "PowerStep", "qr_orth",
+    "IterationDriver", "DriverRun", "BatchRun", "local_apply",
     "deepca", "depca", "centralized_power_method", "sign_adjust",
     "DecentralizedPCAResult", "PowerTrace", "theory_consensus_rounds",
     "DistributedDeEPCA", "make_round_fn", "fastmix_local",

@@ -1,16 +1,28 @@
 """DeEPCA (Alg. 1), DePCA baseline (Wai et al. 2017) and centralized PCA.
 
-All algorithms run in *stacked* form: agent variables are the leading axis of
-``(m, d, k)`` arrays and gossip is a dense mixing-matrix product.  This form
-is bit-equivalent to the device-distributed `shard_map` runtime in
-:mod:`repro.core.gossip_shard` (tested), and is what the paper-fidelity
-benchmarks use.
+This module is the *paper-facing wrapper layer*: it owns diagnostics
+(:class:`PowerTrace`), resumable state, and the theory constants — the
+iteration itself lives one layer down.  The Alg. 1 body has exactly one
+definition, :class:`repro.core.step.PowerStep`, and
+:class:`repro.core.driver.IterationDriver` executes it under every
+substrate (static scan, traced-operand dynamic scan, unrolled
+increasing-rounds loop, device-distributed ``shard_map``, and the
+``vmap``-batched multi-problem server).  :func:`deepca` / :func:`depca`
+translate the paper's signatures into a ``PowerStep`` + engine pair, run
+the driver, and collect the trace; their stacked ``(m, d, k)`` results are
+bit-equivalent to the distributed runtime in
+:mod:`repro.core.gossip_shard` (property-tested in
+tests/test_distributed.py, tests/test_driver.py).
+
+Both algorithms share the resumable ``(S, W, G_prev, offset)`` state
+contract: a resumed run continues communication-round accounting, schedule
+indexing and (for DePCA) the increasing-consensus round schedule at the
+global iteration where the previous run stopped.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Dict, List, NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,22 +30,14 @@ import numpy as np
 
 from . import metrics
 from .consensus import ConsensusEngine, DynamicConsensusEngine
+from .driver import IterationDriver
 from .mixing import consensus_error
 from .operators import StackedOperators, top_k_eigvecs
 from .schedule import TopologySchedule
+from .step import PowerStep, qr_orth, sign_adjust   # noqa: F401 (re-export)
 from .topology import Topology
 
-
-def sign_adjust(W: jax.Array, W0: jax.Array) -> jax.Array:
-    """Alg. 2: flip column signs of W so <W[:,i], W0[:,i]> >= 0."""
-    s = jnp.sign(jnp.sum(W * W0, axis=-2, keepdims=True))
-    s = jnp.where(s == 0, 1.0, s)
-    return W * s
-
-
-def _qr_orth(S: jax.Array) -> jax.Array:
-    q, _ = jnp.linalg.qr(S)
-    return q
+_qr_orth = qr_orth   # backward-compatible private alias
 
 
 class PowerTrace(NamedTuple):
@@ -63,7 +67,7 @@ def centralized_power_method(A: jax.Array, W0: jax.Array, iters: int,
     """Reference centralized PCA (power method with QR), Golub & Van Loan."""
 
     def body(W, _):
-        Wn = _qr_orth(A @ W)
+        Wn = qr_orth(A @ W)
         Wn = sign_adjust(Wn, W0)
         err = metrics.tan_theta_k(U, Wn) if U is not None else jnp.nan
         return Wn, err
@@ -82,6 +86,55 @@ def _make_trace(ops: StackedOperators, U: jax.Array,
         "tan_theta_mean": metrics.tan_theta_k(U, Sbar),
         "comm_rounds": jnp.asarray(rounds, dtype=jnp.float32),
     }
+
+
+def _resolve_engines(algorithm: str, topology: Optional[Topology], K: int, *,
+                     accelerate: bool, backend: str, engine,
+                     schedule: Optional[TopologySchedule]):
+    """(dynamic, static) engine pair from the public wrapper arguments."""
+    if isinstance(engine, DynamicConsensusEngine):
+        return engine, None
+    if schedule is not None:
+        return DynamicConsensusEngine.for_algorithm(
+            algorithm, schedule, K=K, backend=backend,
+            accelerate=accelerate), None
+    if engine is not None:
+        return None, engine
+    return None, ConsensusEngine.for_algorithm(
+        algorithm, topology, K=K, backend=backend, accelerate=accelerate)
+
+
+def _run_decentralized(algorithm: str, ops: StackedOperators,
+                       topology: Optional[Topology], W0: jax.Array, *,
+                       k: int, T: int, K: int, U, accelerate: bool,
+                       state: Optional[tuple], backend: str, engine,
+                       schedule: Optional[TopologySchedule],
+                       increasing_consensus: bool = False,
+                       ) -> DecentralizedPCAResult:
+    """Shared deepca/depca wrapper: step + engines -> driver -> trace."""
+    if U is None:
+        U, _ = top_k_eigvecs(ops.mean_matrix(), k)
+    dyn, eng = _resolve_engines(algorithm, topology, K, accelerate=accelerate,
+                                backend=backend, engine=engine,
+                                schedule=schedule)
+    rounds0 = iters0 = 0
+    carry = None
+    if state is not None:
+        carry = state[:3]
+        if len(state) > 3:
+            off = np.asarray(state[3])
+            rounds0, iters0 = int(off[0]), int(off[1])
+    step = PowerStep.for_algorithm(algorithm, K,
+                                   increasing_consensus=increasing_consensus)
+    driver = IterationDriver(step=step, engine=eng, dynamic=dyn)
+    run = driver.run(ops, W0, T=T, t0=iters0, carry=carry)
+    trace = _collect_trace(ops, U, run.S_hist, run.W_hist, None,
+                           rounds=run.rounds, rounds0=rounds0,
+                           rates=run.rates)
+    spent = int(run.rounds[-1]) if T > 0 else 0
+    offset = jnp.asarray([rounds0 + spent, iters0 + T], jnp.int32)
+    return DecentralizedPCAResult(W=run.carry[1], trace=trace, name=step.name,
+                                  state=(*run.carry, offset))
 
 
 def deepca(ops: StackedOperators, topology: Optional[Topology],
@@ -119,81 +172,10 @@ def deepca(ops: StackedOperators, topology: Optional[Topology],
          ``schedule.topology_at(t)``; the per-step mixing matrices enter the
          scan as traced operands so graph changes never retrace.
     """
-    m, d = ops.m, ops.d
-    if U is None:
-        U, _ = top_k_eigvecs(ops.mean_matrix(), k)
-
-    if isinstance(engine, DynamicConsensusEngine):
-        dyn = engine
-    elif schedule is not None:
-        dyn = DynamicConsensusEngine.for_algorithm(
-            "deepca", schedule, K=K, backend=backend, accelerate=accelerate)
-    else:
-        dyn = None
-
-    # run the iteration in the dtype ops.apply will promote to, so the scan
-    # carry is type-stable even for a low-precision W0 (e.g. bf16 + f32 data)
-    dt = jnp.result_type(W0.dtype, ops.dtype)
-
-    rounds0 = iters0 = 0
-    if state is not None:
-        # resume (checkpoint/restart support); same dtype cast as the fresh
-        # start so a low-precision checkpoint doesn't break the scan carry
-        S, W_stack, G_prev = (x.astype(dt) for x in state[:3])
-        if len(state) > 3:
-            off = np.asarray(state[3])
-            rounds0, iters0 = int(off[0]), int(off[1])
-    else:
-        W_stack = jnp.broadcast_to(W0, (m, d, k)).astype(dt)
-        # Alg. 1 line 2: S_j^0 = W^0 and A_j W_j^{-1} := W^0, i.e. G^0 := W^0.
-        S = W_stack
-        G_prev = W_stack
-
-    if dyn is not None:
-        if dyn.schedule.constant_m(iters0, T) != m:
-            raise ValueError(
-                f"schedule agent count != ops.m={m} over iterations "
-                f"[{iters0}, {iters0 + T})")
-        Ls, etas = dyn.operands(iters0, T, dtype=dt)
-
-        def step(carry, xs):
-            L_t, eta_t = xs
-            S, W, G_prev = carry
-            G = ops.apply(W)                  # A_j W_j^t  (local compute)
-            S_new = S + G - G_prev            # Eqn. (3.1): subspace tracking
-            S_new = dyn.mix_traced(S_new, L_t, eta_t)   # Eqn. (3.2), step-t L
-            W_new = _qr_orth(S_new)           # Eqn. (3.3): local QR
-            W_new = sign_adjust(W_new, W0)    # Alg. 2
-            return (S_new, W_new, G), (S_new, W_new)
-
-        (S, W_stack, G_prev), (S_hist, W_hist) = jax.lax.scan(
-            step, (S, W_stack, G_prev), (Ls, etas), length=T)
-        rates = dyn.contraction_rates(iters0, T)
-    else:
-        if engine is None:
-            engine = ConsensusEngine.for_algorithm(
-                "deepca", topology, K=K, backend=backend,
-                accelerate=accelerate)
-        mix = engine.mix
-
-        def step(carry, _):
-            S, W, G_prev = carry
-            G = ops.apply(W)                  # A_j W_j^t  (local compute)
-            S_new = S + G - G_prev            # Eqn. (3.1): subspace tracking
-            S_new = mix(S_new)                # Eqn. (3.2): FastMix consensus
-            W_new = _qr_orth(S_new)           # Eqn. (3.3): local QR
-            W_new = sign_adjust(W_new, W0)    # Alg. 2
-            return (S_new, W_new, G), (S_new, W_new)
-
-        (S, W_stack, G_prev), (S_hist, W_hist) = jax.lax.scan(
-            step, (S, W_stack, G_prev), None, length=T)
-        rates = np.full(T, engine.contraction_rate(), dtype=np.float32)
-
-    trace = _collect_trace(ops, U, S_hist, W_hist, K, rounds0=rounds0,
-                           rates=rates)
-    offset = jnp.asarray([rounds0 + T * K, iters0 + T], jnp.int32)
-    return DecentralizedPCAResult(W=W_stack, trace=trace, name="DeEPCA",
-                                  state=(S, W_stack, G_prev, offset))
+    return _run_decentralized("deepca", ops, topology, W0, k=k, T=T, K=K,
+                              U=U, accelerate=accelerate, state=state,
+                              backend=backend, engine=engine,
+                              schedule=schedule)
 
 
 def depca(ops: StackedOperators, topology: Optional[Topology],
@@ -202,91 +184,26 @@ def depca(ops: StackedOperators, topology: Optional[Topology],
           accelerate: bool = True, increasing_consensus: bool = False,
           backend: str = "auto",
           engine=None,
-          schedule: Optional[TopologySchedule] = None
+          schedule: Optional[TopologySchedule] = None,
+          state: Optional[tuple] = None
           ) -> DecentralizedPCAResult:
     """Baseline decentralized power method (Eqn. 3.4; Wai et al. 2017).
 
     Each power iteration: local step W_j <- A_j W_j, multi-consensus, QR.
     Without subspace tracking the consensus error floors at a level set by
     data heterogeneity, so K must grow with 1/eps (Eqn. 3.12).  With
-    ``increasing_consensus=True`` we emulate the practical fix of growing the
-    round count: iteration t uses ``K + t`` rounds (the ConsensusEngine's
-    per-call ``rounds`` override, unrolled python loop).  ``schedule``
-    switches the gossip graph per iteration, same contract as
-    :func:`deepca`.
+    ``increasing_consensus=True`` the round count grows instead: global
+    iteration t uses ``K + t`` rounds (the driver's unrolled substrate).
+    ``schedule`` switches the gossip graph per iteration and ``state``
+    resumes a previous run — both with the same global-iteration contract
+    as :func:`deepca` (a resumed run continues round accounting, schedule
+    indexing and the increasing-rounds count where it stopped).
     """
-    m, d = ops.m, ops.d
-    if U is None:
-        U, _ = top_k_eigvecs(ops.mean_matrix(), k)
-
-    if isinstance(engine, DynamicConsensusEngine):
-        dyn = engine
-    elif schedule is not None:
-        dyn = DynamicConsensusEngine.for_algorithm(
-            "depca", schedule, K=K, backend=backend, accelerate=accelerate)
-    else:
-        dyn = None
-        if engine is None:
-            engine = ConsensusEngine.for_algorithm(
-                "depca", topology, K=K, backend=backend,
-                accelerate=accelerate)
-
-    dt = jnp.result_type(W0.dtype, ops.dtype)
-    W_stack = jnp.broadcast_to(W0, (m, d, k)).astype(dt)
-    if dyn is not None and dyn.schedule.constant_m(0, T) != m:
-        raise ValueError(f"schedule agent count != ops.m={m}")
-
-    def one_iter(W_stack, rounds: int, t: int):
-        G = ops.apply(W_stack)
-        if dyn is not None:
-            topo_t = dyn.topology_at(t)
-            G = dyn.mix_traced(G, jnp.asarray(topo_t.mixing, dt),
-                               dyn.eta_of(topo_t), rounds=rounds)
-        else:
-            G = engine.mix(G, rounds=rounds)
-        W_new = _qr_orth(G)
-        W_new = sign_adjust(W_new, W0)
-        return G, W_new
-
-    def rate_at(t: int, rounds: int) -> float:
-        if dyn is not None:
-            return float(dyn.contraction_rates(t, 1, rounds=rounds)[0])
-        return engine.contraction_rate(rounds)
-
-    if increasing_consensus:
-        S_hist, W_hist, rounds_hist, rates = [], [], [], []
-        total = 0
-        for t in range(T):
-            rounds = K + t
-            total += rounds
-            S, W_stack = one_iter(W_stack, rounds, t)
-            S_hist.append(S); W_hist.append(W_stack); rounds_hist.append(total)
-            rates.append(rate_at(t, rounds))
-        S_hist = jnp.stack(S_hist); W_hist = jnp.stack(W_hist)
-        trace = _collect_trace(ops, U, S_hist, W_hist, None,
-                               rounds=np.asarray(rounds_hist, dtype=np.float32),
-                               rates=np.asarray(rates, dtype=np.float32))
-    elif dyn is not None:
-        # unrolled python loop: per-step graphs are resolved statically but
-        # the mixing matrices remain traced operands (no per-graph retrace)
-        S_hist, W_hist = [], []
-        for t in range(T):
-            S, W_stack = one_iter(W_stack, K, t)
-            S_hist.append(S); W_hist.append(W_stack)
-        S_hist = jnp.stack(S_hist); W_hist = jnp.stack(W_hist)
-        trace = _collect_trace(ops, U, S_hist, W_hist, K,
-                               rates=dyn.contraction_rates(0, T))
-    else:
-        def step(W_stack, _):
-            S, W_new = one_iter(W_stack, K, 0)
-            return W_new, (S, W_new)
-
-        W_stack, (S_hist, W_hist) = jax.lax.scan(step, W_stack, None, length=T)
-        trace = _collect_trace(
-            ops, U, S_hist, W_hist, K,
-            rates=np.full(T, engine.contraction_rate(), dtype=np.float32))
-
-    return DecentralizedPCAResult(W=W_stack, trace=trace, name="DePCA")
+    return _run_decentralized("depca", ops, topology, W0, k=k, T=T, K=K,
+                              U=U, accelerate=accelerate, state=state,
+                              backend=backend, engine=engine,
+                              schedule=schedule,
+                              increasing_consensus=increasing_consensus)
 
 
 def _collect_trace(ops, U, S_hist, W_hist, K: Optional[int],

@@ -4,12 +4,18 @@ Before this module, FastMix existed in three divergent forms — the stacked
 einsum loop (:mod:`repro.core.mixing`), the ``shard_map`` collectives
 (:mod:`repro.core.gossip_shard`), and the K-unrolled local loop
 (:func:`repro.core.gossip_shard.fastmix_local`) — each hand-wired into its
-caller.  The engine puts them behind one object that
-:func:`repro.core.algorithms.deepca`/:func:`~repro.core.algorithms.depca`,
-:class:`repro.core.gossip_shard.DistributedDeEPCA` and
-:func:`repro.launch.steps.make_train_step_compressed` all consume, and is
+caller.  The engine puts them behind one object that the step/driver layer
+(:class:`repro.core.step.PowerStep` via
+:class:`repro.core.driver.IterationDriver` — which
+:func:`repro.core.algorithms.deepca`/:func:`~repro.core.algorithms.depca`
+and :class:`repro.core.gossip_shard.DistributedDeEPCA` wrap) and
+:func:`repro.launch.steps.make_train_step_compressed` consume, and is
 the seam later scaling work (async gossip, time-varying topologies,
-multi-mesh) plugs into.
+multi-mesh) plugs into.  The ``mix_track`` family
+(:meth:`ConsensusEngine.mix_track`, :meth:`ConsensusEngine.local_mix_track`,
+:meth:`DynamicConsensusEngine.mix_track_traced`) additionally fuses the
+DeEPCA subspace-tracking combine into the gossip call — on the ``pallas``
+backend inside the kernel launch itself.
 
 Backends
 --------
@@ -118,6 +124,29 @@ def _resolve_mesh(mesh, m: int, axis: str):
     return Mesh(np.asarray(devs), (axis,))
 
 
+def _fused_track_mix(S: jax.Array, G: jax.Array, G_prev: jax.Array,
+                     L: jax.Array, eta, rounds: int, *,
+                     interpret: Optional[bool], block_n: int) -> jax.Array:
+    """Fused tracking+gossip dispatch (pallas backend, static and dynamic).
+
+    Same dtype/precision contract as :func:`_fused_mix`; the subspace-
+    tracking combine rides inside the fused launch so the tracked iterate
+    never round-trips through HBM.
+    """
+    from repro.kernels import fastmix as _fm
+    if S.dtype == jnp.float64:
+        return _fm.fastmix_track_poly(S, G, G_prev, L.astype(jnp.float64),
+                                      eta, rounds)
+    L32 = L.astype(jnp.float32)
+    if interpret is True or jax.default_backend() == "tpu":
+        out = _fm.fastmix_track_fused(S, G, G_prev, L32, eta, rounds,
+                                      block_n=block_n,
+                                      interpret=interpret is True)
+        return out.astype(S.dtype)
+    return _fm.fastmix_track_poly(S, G, G_prev, L32, eta,
+                                  rounds).astype(S.dtype)
+
+
 def _fused_mix(S: jax.Array, L: jax.Array, eta, rounds: int, *,
                interpret: Optional[bool], block_n: int) -> jax.Array:
     """Fused-backend dispatch shared by the static and dynamic engines.
@@ -199,7 +228,11 @@ class ConsensusEngine:
         key = jnp.dtype(dtype).name
         arr = self._L_cache.get(key)
         if arr is None:
-            arr = jnp.asarray(self.topology.mixing, dtype=dtype)
+            # materialise eagerly even when first touched inside a trace
+            # (e.g. under run_batch's jit+vmap): caching a tracer here would
+            # leak it into every later mix() call on this engine
+            with jax.ensure_compile_time_eval():
+                arr = jnp.asarray(self.topology.mixing, dtype=dtype)
             self._L_cache[key] = arr
         return arr
 
@@ -233,6 +266,28 @@ class ConsensusEngine:
             return self._mix_fused(S, r)
         return self._mix_shard_map(S, r)
 
+    def mix_track(self, S: jax.Array, G: jax.Array, G_prev: jax.Array,
+                  rounds: Optional[int] = None) -> jax.Array:
+        """Fused Eqns. (3.1)+(3.2): gossip the subspace-tracked iterate.
+
+        Semantically ``mix(tracking_update(S, G, G_prev))`` on every
+        backend; the ``pallas`` backend runs the combine inside the fused
+        launch (one fewer HBM pass per power iteration), the others fall
+        through to :meth:`mix` on the shared tracking compute site.
+        """
+        r = self.K if rounds is None else int(rounds)
+        if self.backend == "pallas" and r > 0:
+            if S.shape[0] != self.topology.m:
+                raise ValueError(
+                    f"leading (agent) axis {S.shape[0]} != topology m="
+                    f"{self.topology.m}")
+            dtype = jnp.float64 if S.dtype == jnp.float64 else jnp.float32
+            return _fused_track_mix(S, G, G_prev, self._L(dtype), self.eta,
+                                    r, interpret=self.interpret,
+                                    block_n=self.block_n)
+        from repro.kernels.fastmix import tracking_update
+        return self.mix(tracking_update(S, G, G_prev), rounds=rounds)
+
     def _mix_fused(self, S: jax.Array, rounds: int) -> jax.Array:
         dtype = jnp.float64 if S.dtype == jnp.float64 else jnp.float32
         return _fused_mix(S, self._L(dtype), self.eta, rounds,
@@ -264,6 +319,19 @@ class ConsensusEngine:
         from .gossip_shard import fastmix_local
         r = self.K if rounds is None else int(rounds)
         return fastmix_local(x, self.local_round_fn(axis), self.eta, r)
+
+    def local_mix_track(self, S: jax.Array, G: jax.Array, G_prev: jax.Array,
+                        axis: Optional[str] = None,
+                        rounds: Optional[int] = None) -> jax.Array:
+        """Tracked :meth:`local_mix` (shard_map body of the DeEPCA step).
+
+        The combine stays on the shared tracking compute site; per-device
+        slices are small enough that XLA fuses it into the first collective
+        round's input.
+        """
+        from repro.kernels.fastmix import tracking_update
+        return self.local_mix(tracking_update(S, G, G_prev), axis=axis,
+                              rounds=rounds)
 
     # -------------------------------------------------------- construction
     @classmethod
@@ -389,6 +457,25 @@ class DynamicConsensusEngine:
             return _fused_mix(S, L, eta, r, interpret=self.interpret,
                               block_n=self.block_n)
         return self._mix_shard_map_traced(S, L, eta, r)
+
+    def mix_track_traced(self, S: jax.Array, G: jax.Array, G_prev: jax.Array,
+                         L: jax.Array, eta,
+                         rounds: Optional[int] = None) -> jax.Array:
+        """Tracked :meth:`mix_traced` — the scan-body DeEPCA gossip call.
+
+        ``pallas`` fuses the subspace-tracking combine into the launch with
+        ``(L, eta)`` still traced (no retrace on graph swap); the other
+        backends compose the shared tracking compute site with the plain
+        traced mix.
+        """
+        r = self.K if rounds is None else int(rounds)
+        if self.backend == "pallas" and r > 0:
+            return _fused_track_mix(S, G, G_prev, L, eta, r,
+                                    interpret=self.interpret,
+                                    block_n=self.block_n)
+        from repro.kernels.fastmix import tracking_update
+        return self.mix_traced(tracking_update(S, G, G_prev), L, eta,
+                               rounds=rounds)
 
     def _mix_shard_map_traced(self, S, L, eta, rounds: int):
         # the dense all_gather round is the only lowering valid for EVERY

@@ -1,0 +1,453 @@
+"""IterationDriver: run a PowerStep under any execution substrate.
+
+One driver owns the four ways the repo executes power iterations, all
+sharing the single :class:`~repro.core.step.PowerStep` body:
+
+``scan``
+    Static-topology ``jax.lax.scan`` with a
+    :class:`~repro.core.consensus.ConsensusEngine` (the stacked simulator's
+    hot path; any gossip backend).
+``traced_scan``
+    Dynamic-schedule scan: the per-step mixing matrices and momenta enter
+    as ``(T, m, m)`` / ``(T,)`` traced operands
+    (:meth:`DynamicConsensusEngine.operands`), so graph swaps never
+    retrace.
+``unrolled``
+    Python-unrolled loop for per-iteration *static* variation — DePCA's
+    increasing-rounds schedule and eager schedule consumption (per-step
+    graphs resolved statically, matrices still traced).
+``shard_map``
+    The device-distributed runtime: :meth:`sharded_step_fn` /
+    :meth:`sharded_dense_step_fn` build the jitted per-iteration programs
+    :class:`~repro.core.gossip_shard.DistributedDeEPCA` loops over (agents
+    = devices along a named mesh axis).
+
+On top of the unified step the driver adds **batched multi-problem
+execution** (:meth:`run_batch`): a ``vmap``-over-problems axis so ONE
+compiled program serves ``B`` independent ``(ops, W0, schedule-offset)``
+PCA problems per launch — the serving substrate ``repro.launch.serve``'s
+``--workload pca`` mode uses for heavy traffic.
+
+Substrate selection (``substrate="auto"``)
+------------------------------------------
+* increasing rounds          -> ``unrolled`` (per-iteration round counts are
+  static jit arguments);
+* static engine              -> ``scan``;
+* dynamic engine + tracking  -> ``traced_scan``;
+* dynamic engine, no tracking-> ``unrolled`` (the DePCA schedule path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .consensus import ConsensusEngine, DynamicConsensusEngine
+from .operators import StackedOperators
+from .step import Carry, PowerStep
+
+SUBSTRATES = ("auto", "scan", "traced_scan", "unrolled")
+
+
+def local_apply(A: jax.Array, W: jax.Array,
+                kind: str = "auto") -> jax.Array:
+    """Local power step on a ``(1, ...)`` shard_map slice.
+
+    ``kind`` declares the operator form: ``"dense"`` (``(1, d, d)`` matrix
+    ``A_j``) or ``"data"`` (``(1, n, d)`` rows ``X_j``, applied in implicit
+    Gram form).  ``"auto"`` falls back to the historical shape heuristic —
+    square trailing block means dense — which MISREADS data operators with
+    ``n == d``; callers that know the form (e.g.
+    :class:`~repro.core.gossip_shard.DistributedDeEPCA` via
+    ``operator_kind=``) should pass it explicitly.  Both forms route
+    through :meth:`StackedOperators.apply`, so the distributed runtime and
+    the stacked simulator share one local-compute definition.
+    """
+    if kind == "auto":
+        kind = ("dense" if A.ndim == 3 and A.shape[-2] == A.shape[-1]
+                else "data")
+    if kind == "dense":
+        return StackedOperators(dense=A).apply(W)
+    if kind == "data":
+        return StackedOperators(data=A).apply(W)
+    raise ValueError(f"kind must be auto/dense/data, got {kind!r}")
+
+
+class DriverRun(NamedTuple):
+    """One driver execution window (T iterations of one problem)."""
+
+    carry: Carry               # (S, W, G_prev) final resumable state
+    S_hist: jax.Array          # (T, m, d, k) pre-QR iterates
+    W_hist: jax.Array          # (T, m, d, k) per-iteration estimates
+    rounds: np.ndarray         # (T,) cumulative gossip rounds (this window)
+    rates: np.ndarray          # (T,) Prop. 1 contraction bound per iteration
+
+
+class BatchRun(NamedTuple):
+    """`run_batch` output: leading axis is the problem axis B."""
+
+    S: jax.Array               # (B, m, d, k)
+    W: jax.Array               # (B, m, d, k) final local estimates
+    G_prev: jax.Array          # (B, m, d, k)
+    S_hist: Optional[jax.Array] = None    # (B, T, m, d, k) when requested
+    W_hist: Optional[jax.Array] = None
+
+    @property
+    def carries(self) -> Carry:
+        return (self.S, self.W, self.G_prev)
+
+
+@dataclasses.dataclass
+class IterationDriver:
+    """Runs a :class:`PowerStep` under every execution substrate.
+
+    Exactly one of ``engine`` (static topology) / ``dynamic``
+    (schedule-driven) must be set; the wrappers in
+    :mod:`repro.core.algorithms` build both from their public arguments.
+    """
+
+    step: PowerStep
+    engine: Optional[ConsensusEngine] = None
+    dynamic: Optional[DynamicConsensusEngine] = None
+    _batch_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False)
+    # per-(substrate, T, kind) cache of jitted single-problem programs:
+    # repeated run() calls on one driver (sequential serving, block-resumed
+    # loops) must not re-trace the T-step scan every time
+    _run_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False)
+
+    def __post_init__(self):
+        if (self.engine is None) == (self.dynamic is None):
+            raise ValueError(
+                "exactly one of engine (static) / dynamic (schedule) "
+                "must be provided")
+
+    # ------------------------------------------------------------ running
+    def run(self, ops: StackedOperators, W0: jax.Array, *, T: int,
+            t0: int = 0, carry: Optional[Carry] = None,
+            substrate: str = "auto") -> DriverRun:
+        """T power iterations starting at global iteration ``t0``.
+
+        ``carry`` resumes from a previous window's :attr:`DriverRun.carry`
+        (cast to the run dtype, like a fresh start); ``t0`` keeps schedule
+        indexing and increasing-rounds accounting global across resumes.
+        """
+        if substrate not in SUBSTRATES:
+            raise ValueError(
+                f"substrate must be one of {SUBSTRATES}, got {substrate!r}")
+        dt = jnp.result_type(W0.dtype, ops.dtype)
+        if carry is None:
+            carry = self.step.init_carry(ops, W0, dtype=dt)
+        else:
+            carry = tuple(x.astype(dt) for x in carry[:3])
+        if self.dynamic is not None and \
+                self.dynamic.schedule.constant_m(t0, T) != ops.m:
+            raise ValueError(
+                f"schedule agent count != ops.m={ops.m} over iterations "
+                f"[{t0}, {t0 + T})")
+        if substrate == "auto":
+            if self.step.increasing:
+                substrate = "unrolled"
+            elif self.dynamic is None:
+                substrate = "scan"
+            else:
+                substrate = "traced_scan" if self.step.track else "unrolled"
+        if substrate == "scan" and self.engine is None:
+            raise ValueError("substrate 'scan' needs a static engine")
+        if substrate == "traced_scan" and self.dynamic is None:
+            raise ValueError("substrate 'traced_scan' needs a dynamic engine")
+        if substrate != "unrolled" and self.step.increasing:
+            raise ValueError("increasing rounds require the unrolled "
+                             "substrate (per-step static round counts)")
+        fn = {"scan": self._run_scan, "traced_scan": self._run_traced_scan,
+              "unrolled": self._run_unrolled}[substrate]
+        return fn(ops, W0, carry, T, t0, dt)
+
+    @staticmethod
+    def _rebuild_ops(kind: str, arr: jax.Array) -> StackedOperators:
+        return (StackedOperators(dense=arr) if kind == "dense"
+                else StackedOperators(data=arr))
+
+    def _scan_fn(self, T: int, kind: str):
+        """Cached jitted static-topology scan over one problem."""
+        key = ("scan", T, kind)
+        fn = self._run_cache.get(key)
+        if fn is None:
+            step = self.step
+            mix = step.make_mix(self.engine)
+
+            def scan_fn(arr, W0, carry):
+                ops = self._rebuild_ops(kind, arr)
+
+                def body(c, _):
+                    return step(c, mix, W0, ops.apply)
+
+                return jax.lax.scan(body, carry, None, length=T)
+
+            fn = self._run_cache[key] = jax.jit(scan_fn)
+        return fn
+
+    def _traced_scan_fn(self, T: int, kind: str):
+        """Cached jitted dynamic-schedule scan; ``(Ls, etas)`` are traced."""
+        key = ("traced_scan", T, kind)
+        fn = self._run_cache.get(key)
+        if fn is None:
+            step, dyn = self.step, self.dynamic
+
+            def scan_fn(arr, W0, carry, Ls, etas):
+                ops = self._rebuild_ops(kind, arr)
+
+                def body(c, xs):
+                    L_t, eta_t = xs
+                    return step(c, step.make_mix_traced(dyn, L_t, eta_t),
+                                W0, ops.apply)
+
+                return jax.lax.scan(body, carry, (Ls, etas), length=T)
+
+            fn = self._run_cache[key] = jax.jit(scan_fn)
+        return fn
+
+    def _run_scan(self, ops, W0, carry, T, t0, dt) -> DriverRun:
+        K = self.step.rounds
+        kind = "dense" if ops.dense is not None else "data"
+        fn = self._scan_fn(T, kind)
+        carry, (S_hist, W_hist) = fn(ops.array, W0, carry)
+        rounds = np.arange(1, T + 1, dtype=np.float32) * float(K)
+        rates = np.full(T, self.engine.contraction_rate(K), dtype=np.float32)
+        return DriverRun(carry, S_hist, W_hist, rounds, rates)
+
+    def _run_traced_scan(self, ops, W0, carry, T, t0, dt) -> DriverRun:
+        Ls, etas = self.dynamic.operands(t0, T, dtype=dt)
+        kind = "dense" if ops.dense is not None else "data"
+        fn = self._traced_scan_fn(T, kind)
+        carry, (S_hist, W_hist) = fn(ops.array, W0, carry, Ls, etas)
+        rounds = np.arange(1, T + 1, dtype=np.float32) * float(self.step.rounds)
+        rates = self.dynamic.contraction_rates(t0, T)
+        return DriverRun(carry, S_hist, W_hist, rounds, rates)
+
+    def _run_unrolled(self, ops, W0, carry, T, t0, dt) -> DriverRun:
+        step, eng, dyn = self.step, self.engine, self.dynamic
+        S_hist, W_hist, rounds, rates = [], [], [], []
+        total = 0
+        for i in range(T):
+            t = t0 + i
+            r = step.rounds_at(t)
+            total += r
+            if dyn is not None:
+                topo_t = dyn.topology_at(t)
+                mix = step.make_mix_traced(
+                    dyn, jnp.asarray(topo_t.mixing, dt), dyn.eta_of(topo_t),
+                    rounds=r)
+                rates.append(float(dyn.contraction_rates(t, 1, rounds=r)[0]))
+            else:
+                mix = step.make_mix(eng, rounds=r)
+                rates.append(eng.contraction_rate(r))
+            carry, (S_t, W_t) = step(carry, mix, W0, ops.apply)
+            S_hist.append(S_t)
+            W_hist.append(W_t)
+            rounds.append(total)
+        return DriverRun(carry, jnp.stack(S_hist), jnp.stack(W_hist),
+                         np.asarray(rounds, dtype=np.float32),
+                         np.asarray(rates, dtype=np.float32))
+
+    # ----------------------------------------------- batched multi-problem
+    def run_batch(self, ops_batch, W0, *, T: int,
+                  t0: Optional[Sequence[int]] = None,
+                  with_history: bool = False) -> BatchRun:
+        """One compiled program serving B independent PCA problems.
+
+        The per-problem scan is ``vmap``-ped over a leading problem axis, so
+        a serving process amortises compilation, dispatch and scheduling
+        across every concurrent workload instead of running B sequential
+        drivers — the batched substrate of the production serving story.
+        The win is in the amortisation: one launch replaces B
+        trace+dispatch round-trips (10-40x vs a driver per request on the
+        CPU bench host, see ``bench_mixing.py --batched``); at
+        compute-bound shapes on CPU a warm single driver's jitted-program
+        cache can match it, and the batched program earns its keep on
+        accelerators and under real request traffic.
+
+        Args:
+          ops_batch: list of B :class:`StackedOperators` (same kind and
+            shapes), or one whose arrays carry a leading ``(B, m, ...)``
+            problem axis.
+          W0: ``(d, k)`` shared or ``(B, d, k)`` per-problem inits.
+          t0: per-problem global iteration offsets (dynamic schedules index
+            ``schedule.topology_at(t0_b + i)``; each problem may sit at a
+            different point of the shared schedule).  Ignored for static
+            engines.
+          with_history: also return the ``(B, T, m, d, k)`` iterate
+            histories (costly at scale; off for pure serving).
+
+        The gossip math runs in stacked/traced form (``shard_map`` cannot be
+        vmapped over problems — devices are a physical axis); the tracking
+        combine still routes through the shared compute site.
+        """
+        backend = (self.engine or self.dynamic).backend
+        if backend == "shard_map":
+            raise ValueError(
+                "run_batch cannot vmap the shard_map backend (devices are "
+                "a physical axis); use stacked/pallas for batched serving")
+        step = self.step
+        if step.increasing:
+            raise ValueError("increasing rounds cannot be batched "
+                             "(round counts vary per problem step)")
+        kind, arr = self._stack_problems(ops_batch)
+        B = arr.shape[0]
+        W0 = jnp.asarray(W0)
+        if W0.ndim == 2:
+            W0 = jnp.broadcast_to(W0, (B,) + W0.shape)
+        dt = jnp.result_type(W0.dtype, arr.dtype)
+
+        if self.dynamic is not None:
+            offs = [0] * B if t0 is None else [int(x) for x in t0]
+            if len(offs) != B:
+                raise ValueError(f"t0 has {len(offs)} offsets for {B} "
+                                 "problems")
+            ops_all = []
+            for off in offs:
+                Ls_b, etas_b = self.dynamic.operands(off, T, dtype=dt)
+                ops_all.append((Ls_b, etas_b))
+            Ls = jnp.stack([o[0] for o in ops_all])
+            etas = jnp.stack([o[1] for o in ops_all])
+            fn = self._batch_fn(T, kind, with_history, dynamic=True)
+            out = fn(arr, W0, Ls, etas)
+        else:
+            fn = self._batch_fn(T, kind, with_history, dynamic=False)
+            out = fn(arr, W0)
+        (S, W, G_prev), hists = out
+        if with_history:
+            return BatchRun(S, W, G_prev, S_hist=hists[0], W_hist=hists[1])
+        return BatchRun(S, W, G_prev)
+
+    @staticmethod
+    def _stack_problems(ops_batch) -> Tuple[str, jax.Array]:
+        """Normalise a problem batch to ``(kind, (B, m, ...) array)``."""
+        if isinstance(ops_batch, StackedOperators):
+            arr = ops_batch.array
+            if arr.ndim != 4:
+                raise ValueError(
+                    "a StackedOperators batch needs a leading problem axis "
+                    f"(B, m, ...); got shape {arr.shape}")
+            return ("dense" if ops_batch.dense is not None else "data"), arr
+        kinds = {("dense" if o.dense is not None else "data")
+                 for o in ops_batch}
+        if len(kinds) != 1:
+            raise ValueError(f"mixed operator kinds in batch: {kinds}")
+        kind = kinds.pop()
+        return kind, jnp.stack([o.array for o in ops_batch])
+
+    def _batch_fn(self, T: int, kind: str, with_history: bool,
+                  dynamic: bool):
+        key = (T, kind, with_history, dynamic)
+        fn = self._batch_cache.get(key)
+        if fn is not None:
+            return fn
+        step, eng, dyn = self.step, self.engine, self.dynamic
+
+        def one_static(arr, W0_b):
+            ops_b = (StackedOperators(dense=arr) if kind == "dense"
+                     else StackedOperators(data=arr))
+            carry = step.init_carry(ops_b, W0_b)
+            mix = step.make_mix(eng)
+
+            def body(c, _):
+                return step(c, mix, W0_b, ops_b.apply)
+
+            carry, hists = jax.lax.scan(body, carry, None, length=T)
+            return carry, (hists if with_history else ())
+
+        def one_dynamic(arr, W0_b, Ls_b, etas_b):
+            ops_b = (StackedOperators(dense=arr) if kind == "dense"
+                     else StackedOperators(data=arr))
+            carry = step.init_carry(ops_b, W0_b)
+
+            def body(c, xs):
+                L_t, eta_t = xs
+                return step(c, step.make_mix_traced(dyn, L_t, eta_t), W0_b,
+                            ops_b.apply)
+
+            carry, hists = jax.lax.scan(body, carry, (Ls_b, etas_b),
+                                        length=T)
+            return carry, (hists if with_history else ())
+
+        fn = jax.jit(jax.vmap(one_dynamic if dynamic else one_static))
+        self._batch_cache[key] = fn
+        return fn
+
+    # --------------------------------------------------- shard_map builders
+    def sharded_step_fn(self, mesh, axis: str, engine: ConsensusEngine,
+                        operator_kind: str = "auto"):
+        """Jitted distributed step for a *structured* topology lowering.
+
+        Gossip goes through ``engine.local_mix_track`` (ring/hypercube
+        ``collective_permute`` or dense ``all_gather``, chosen structurally
+        by the engine's round fn); the body is the shared PowerStep on the
+        per-device ``(1, d, k)`` slice.
+        """
+        import functools
+        from jax.sharding import PartitionSpec as P
+        from repro.runtime.compat import shard_map
+
+        step = self.step
+        spec_v = P(axis)
+
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), spec_v, spec_v, spec_v, P()),
+            out_specs=(spec_v, spec_v, spec_v),
+            check_vma=False)
+        def _step(A, S, W, G_prev, W0):
+            def mix(S_, G_, Gp_):
+                if step.track:
+                    return engine.local_mix_track(S_, G_, Gp_, axis=axis)
+                return engine.local_mix(G_, axis=axis)
+
+            (S_new, W_new, G), _ = step(
+                (S, W, G_prev), mix, W0,
+                lambda V: local_apply(A, V, kind=operator_kind))
+            return S_new, W_new, G
+
+        return jax.jit(_step)
+
+    def sharded_dense_step_fn(self, mesh, axis: str,
+                              operator_kind: str = "auto"):
+        """One jitted distributed step shared by ALL dense-lowered graphs.
+
+        ``L`` (replicated ``(m, m)``) and ``eta`` are traced operands:
+        swapping to any other same-``m`` dense graph reuses the compiled
+        step — the no-retrace contract for dynamic topologies.
+        """
+        import functools
+        from jax.sharding import PartitionSpec as P
+        from repro.runtime.compat import shard_map
+        from repro.kernels.fastmix import tracking_update
+
+        step = self.step
+        K = step.rounds
+        spec_v = P(axis)
+
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), spec_v, spec_v, spec_v, P(), P(), P()),
+            out_specs=(spec_v, spec_v, spec_v),
+            check_vma=False)
+        def _step(A, S, W, G_prev, W0, L, eta):
+            from .gossip_shard import _dense_round, fastmix_local
+
+            def mix(S_, G_, Gp_):
+                x = tracking_update(S_, G_, Gp_) if step.track else G_
+                return fastmix_local(
+                    x, lambda y: _dense_round(y, L, axis), eta, K)
+
+            (S_new, W_new, G), _ = step(
+                (S, W, G_prev), mix, W0,
+                lambda V: local_apply(A, V, kind=operator_kind))
+            return S_new, W_new, G
+
+        return jax.jit(_step)

@@ -7,16 +7,23 @@ hypercube — pure nearest-neighbour ICI traffic, *no all-reduce anywhere in
 the algorithm*) or to one `all_gather` per round for an arbitrary dense
 mixing matrix (the paper's Erdős–Rényi setting).
 
-The semantics are bit-identical to the stacked simulator in
-:mod:`repro.core.algorithms` (property-tested in tests/test_distributed.py).
-This module is the ``shard_map`` backend of
-:class:`repro.core.consensus.ConsensusEngine`; ``shard_map`` itself comes
-from :mod:`repro.runtime.compat` so the code runs on every jax version.
+This module owns the *collective lowerings* — per-round gossip primitives
+(:func:`make_round_fn`, :func:`fastmix_local`) and the structural topology
+matchers — and the device-placement loop of :class:`DistributedDeEPCA`.
+The iteration body itself is NOT defined here: the jitted per-step
+programs come from
+:meth:`repro.core.driver.IterationDriver.sharded_step_fn` /
+:meth:`~repro.core.driver.IterationDriver.sharded_dense_step_fn`, which run
+the single shared :class:`~repro.core.step.PowerStep` on the local
+``(1, d, k)`` slices, so the distributed runtime executes literally the
+same Alg. 1 body as the stacked simulator in :mod:`repro.core.algorithms`
+(bit-equivalence property-tested in tests/test_distributed.py and
+tests/test_driver.py).  ``shard_map`` itself comes from
+:mod:`repro.runtime.compat` so the code runs on every jax version.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Optional, Tuple
 
 import numpy as np
@@ -25,10 +32,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.runtime.compat import shard_map
-
-from .algorithms import sign_adjust
 from .consensus import ConsensusEngine
+from .driver import IterationDriver
+from .step import PowerStep
 from .topology import Topology
 
 AXIS = "agents"
@@ -143,10 +149,16 @@ def fastmix_local(x: jax.Array, round_fn, eta: float, K: int) -> jax.Array:
 class DistributedDeEPCA:
     """DeEPCA where each mesh device along ``axis`` is one agent.
 
-    Gossip is delegated to a :class:`~repro.core.consensus.ConsensusEngine`
+    This class is a thin consumer of the shared step/driver layer: the
+    per-iteration jitted programs come from
+    :meth:`IterationDriver.sharded_step_fn` (one
+    :class:`~repro.core.step.PowerStep` body for every substrate), and
+    gossip is delegated to a :class:`~repro.core.consensus.ConsensusEngine`
     (shard_map backend) so this runtime, the stacked simulator and the
     compressed trainer all share one consensus implementation; pass
-    ``engine=`` to override (e.g. a ``variant="naive"`` baseline).
+    ``engine=`` to override (e.g. a ``variant="naive"`` baseline).  What
+    remains here is device placement, the compiled-step cache and mid-run
+    topology swapping.
 
     The runtime survives mid-run topology swaps: :meth:`swap_topology`
     replaces the gossip graph between iterations (same ``m`` — the mesh is
@@ -172,6 +184,11 @@ class DistributedDeEPCA:
     T: int
     axis: str = AXIS
     engine: Optional[ConsensusEngine] = None
+    # operator form of the A argument to run(): "dense" ((m, d, d)
+    # matrices), "data" ((m, n, d) rows, implicit Gram), or "auto" (square
+    # trailing block => dense — ambiguous when n == d, so declare it when
+    # you know it)
+    operator_kind: str = "auto"
     _step_cache: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False)
 
@@ -200,36 +217,17 @@ class DistributedDeEPCA:
         self.topology = topology
         self.engine = dataclasses.replace(self.engine, topology=topology)
 
-    # -- one full power iteration on local slices -------------------------
-    @staticmethod
-    def _local_power(A, W):
-        # A: (1, d, d) | (1, n, d);  W: (1, d, k)
-        if A.shape[-2] == A.shape[-1] and A.ndim == 3:
-            return jnp.einsum("mde,mek->mdk", A, W)
-        XW = jnp.einsum("mnd,mdk->mnk", A, W)
-        return jnp.einsum("mnd,mnk->mdk", A, XW)
+    # -- per-iteration programs (built by the shared driver layer) --------
+    def _driver(self) -> IterationDriver:
+        """A driver over the CURRENT engine (cheap; steps are cached here)."""
+        return IterationDriver(step=PowerStep.for_algorithm("deepca", self.K),
+                               engine=self.engine)
 
     def step_fn(self):
         """Jitted step for the CURRENT topology (structured lowering path)."""
-        spec_a = P(self.axis)          # operators sharded over agents
-        spec_v = P(self.axis)          # iterates sharded over agents
-        spec_r = P()                   # replicated W0
-        engine = self.engine
-
-        @functools.partial(
-            shard_map, mesh=self.mesh,
-            in_specs=(spec_a, spec_v, spec_v, spec_v, spec_r),
-            out_specs=(spec_v, spec_v, spec_v),
-            check_vma=False)
-        def _step(A, S, W, G_prev, W0):
-            G = self._local_power(A, W)
-            S_new = S + G - G_prev                  # subspace tracking
-            S_new = engine.local_mix(S_new, axis=self.axis)
-            q, _ = jnp.linalg.qr(S_new[0])
-            W_new = sign_adjust(q, W0)[None]
-            return S_new, W_new, G
-
-        return jax.jit(_step)
+        return self._driver().sharded_step_fn(
+            self.mesh, self.axis, self.engine,
+            operator_kind=self.operator_kind)
 
     def _dense_step_fn(self):
         """One jitted step shared by ALL dense-lowered topologies.
@@ -238,24 +236,8 @@ class DistributedDeEPCA:
         swapping to any other same-``m`` dense graph reuses the compiled
         step — the heart of the no-retrace contract for dynamic topologies.
         """
-        spec_v = P(self.axis)
-        K, axis = self.K, self.axis
-
-        @functools.partial(
-            shard_map, mesh=self.mesh,
-            in_specs=(P(self.axis), spec_v, spec_v, spec_v, P(), P(), P()),
-            out_specs=(spec_v, spec_v, spec_v),
-            check_vma=False)
-        def _step(A, S, W, G_prev, W0, L, eta):
-            G = self._local_power(A, W)
-            S_new = S + G - G_prev
-            S_new = fastmix_local(
-                S_new, lambda y: _dense_round(y, L, axis), eta, K)
-            q, _ = jnp.linalg.qr(S_new[0])
-            W_new = sign_adjust(q, W0)[None]
-            return S_new, W_new, G
-
-        return jax.jit(_step)
+        return self._driver().sharded_dense_step_fn(
+            self.mesh, self.axis, operator_kind=self.operator_kind)
 
     def _step_for(self, topology: Topology):
         """(step_fn, extra_operands) for one topology, cached by lowering."""

@@ -99,6 +99,26 @@ def synthetic_spiked(m: int, d: int, k: int, *, n_per_agent: int = 64,
     return StackedOperators(data=jnp.asarray(data, dtype=jnp.float32))
 
 
+def synthetic_problem_batch(B: int, m: int, d: int, k: int, *,
+                            n_per_agent: int = 64, seed: int = 0):
+    """B independent spiked-covariance problems + per-problem inits.
+
+    The shared setup of every batched-serving consumer
+    (:meth:`repro.core.driver.IterationDriver.run_batch` benchmarks,
+    ``launch.serve --workload pca``, the quickstart): returns
+    ``(problems, W0)`` where ``problems`` is a list of B
+    :class:`StackedOperators` (seeds strided so the problems differ) and
+    ``W0`` is a ``(B, d, k)`` stack of orthonormal initialisations.
+    """
+    problems = [synthetic_spiked(m, d, k, n_per_agent=n_per_agent,
+                                 seed=seed + 17 * b) for b in range(B)]
+    rng = np.random.default_rng(seed)
+    W0 = jnp.stack([
+        jnp.asarray(np.linalg.qr(rng.standard_normal((d, k)))[0],
+                    jnp.float32) for _ in range(B)])
+    return problems, W0
+
+
 def libsvm_like(m: int, n: int, d: int, *, seed: int = 0,
                 sparsity: float = 0.85, heterogeneity: float = 1.0,
                 dtype=jnp.float32) -> StackedOperators:

@@ -1,0 +1,143 @@
+"""PowerStep: the paper's Alg. 1 iteration body as data + one function.
+
+Before this module the five-line step — local power ``A_j W_j``, subspace
+tracking (Eqn. 3.1), gossip (Eqn. 3.2), local QR (Eqn. 3.3), sign-adjust
+(Alg. 2) — was copy-pasted across every execution substrate (two scan
+bodies in ``deepca``, three loop variants in ``depca``, both ``shard_map``
+step builders, the fault-tolerant runtime).  A :class:`PowerStep` captures
+the *algorithmic* degrees of freedom as data:
+
+* ``track`` — DeEPCA's subspace tracking vs. the DePCA baseline's plain
+  power step (``S^t = A_j W_j`` gossiped directly);
+* ``rounds`` / ``increasing`` — gossip rounds per iteration, optionally
+  growing with the (global) iteration index (DePCA's increasing-consensus
+  schedule, Eqn. 3.12);
+* ``name`` — the algorithm label carried into results.
+
+and :meth:`PowerStep.__call__` is the ONE definition of the iteration body.
+Substrates differ only in the ``mix`` and ``apply_fn`` callables they hand
+it — a stacked ``ConsensusEngine.mix_track``, a traced-operand
+``mix_track_traced`` inside a scan, or an ``engine.local_mix_track`` on a
+``(1, d, k)`` slice inside ``shard_map``.  The actual tracking arithmetic
+lives in :func:`repro.kernels.fastmix.tracking_update` (shared with the
+fused Pallas kernel), so the whole repo has exactly one tracking compute
+site.
+
+:class:`repro.core.driver.IterationDriver` runs a step under each substrate;
+:func:`repro.core.algorithms.deepca` / ``depca`` are thin wrappers over it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Carry = Tuple[jax.Array, jax.Array, jax.Array]   # (S, W, G_prev)
+
+
+def sign_adjust(W: jax.Array, W0: jax.Array) -> jax.Array:
+    """Alg. 2: flip column signs of W so <W[:,i], W0[:,i]> >= 0."""
+    s = jnp.sign(jnp.sum(W * W0, axis=-2, keepdims=True))
+    s = jnp.where(s == 0, 1.0, s)
+    return W * s
+
+
+def qr_orth(S: jax.Array) -> jax.Array:
+    """Eqn. (3.3): per-agent thin-QR orthonormalisation (batched over any
+    leading axes — works on stacked ``(m, d, k)`` and local ``(1, d, k)``
+    slices alike)."""
+    q, _ = jnp.linalg.qr(S)
+    return q
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerStep:
+    """Alg. 1 / DePCA iteration body as data.
+
+    Attributes:
+      track: run the subspace-tracking update (DeEPCA) or gossip the raw
+        power step (DePCA baseline).
+      rounds: base gossip rounds K per power iteration.
+      increasing: iteration ``t`` (global, resume-aware) gossips with
+        ``rounds + t`` rounds instead of ``rounds`` (DePCA's practical fix
+        for its consensus floor; forces the unrolled substrate).
+      name: algorithm label (``"DeEPCA"`` / ``"DePCA"``).
+    """
+
+    track: bool
+    rounds: int
+    increasing: bool = False
+    name: str = "DeEPCA"
+
+    @classmethod
+    def for_algorithm(cls, algorithm: str, K: int,
+                      increasing_consensus: bool = False) -> "PowerStep":
+        """The deepca/depca step selector (mirror of the engine selectors)."""
+        if algorithm == "deepca":
+            if increasing_consensus:
+                raise ValueError("deepca does not use increasing consensus "
+                                 "(K is eps-independent — Thm. 1)")
+            return cls(track=True, rounds=K, name="DeEPCA")
+        if algorithm == "depca":
+            return cls(track=False, rounds=K,
+                       increasing=increasing_consensus, name="DePCA")
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+
+    def rounds_at(self, t: int) -> int:
+        """Gossip rounds for (global) iteration ``t``."""
+        return self.rounds + t if self.increasing else self.rounds
+
+    def init_carry(self, ops, W0: jax.Array, dtype=None) -> Carry:
+        """Alg. 1 line 2: ``S^0 = G^0 = W^0`` on every agent.
+
+        The carry is uniform across variants — DePCA simply never reads the
+        ``S``/``G_prev`` slots — so resume state, checkpointing and the
+        driver's substrates all share one shape.
+        """
+        dt = dtype if dtype is not None else jnp.result_type(W0.dtype,
+                                                             ops.dtype)
+        W = jnp.broadcast_to(W0, (ops.m,) + W0.shape).astype(dt)
+        return (W, W, W)
+
+    def __call__(self, carry: Carry,
+                 mix: Callable[[jax.Array, jax.Array, jax.Array], jax.Array],
+                 W0: jax.Array,
+                 apply_fn: Callable[[jax.Array], jax.Array]
+                 ) -> Tuple[Carry, Tuple[jax.Array, jax.Array]]:
+        """One power iteration — the single definition of the Alg. 1 body.
+
+        Args:
+          carry: ``(S, W, G_prev)`` agent-stacked (or local-slice) state.
+          mix: consensus callable ``(S, G, G_prev) -> S_new``; owns both the
+            tracking-or-not decision's arithmetic (via the engine's
+            ``mix_track`` family for ``track=True``) and the gossip rounds.
+          W0: the common initialisation, for Alg. 2 sign adjustment.
+          apply_fn: the local power step ``W -> A_j W_j``.
+        Returns:
+          ``(new_carry, (S_new, W_new))`` — scan-body shaped.
+        """
+        S, W, G_prev = carry
+        G = apply_fn(W)                       # A_j W_j^t   (local compute)
+        S_new = mix(S, G, G_prev)             # Eqns. (3.1)+(3.2) fused in mix
+        W_new = sign_adjust(qr_orth(S_new), W0)   # Eqn. (3.3) + Alg. 2
+        return (S_new, W_new, G), (S_new, W_new)
+
+    def make_mix(self, engine, rounds: int = None):
+        """Stacked-form ``mix`` callable for one iteration on a static
+        :class:`~repro.core.consensus.ConsensusEngine`."""
+        r = self.rounds if rounds is None else rounds
+        if self.track:
+            return lambda S, G, G_prev: engine.mix_track(S, G, G_prev,
+                                                         rounds=r)
+        return lambda S, G, G_prev: engine.mix(G, rounds=r)
+
+    def make_mix_traced(self, dynamic, L, eta, rounds: int = None):
+        """Traced-operand ``mix`` for one scan step on a
+        :class:`~repro.core.consensus.DynamicConsensusEngine`."""
+        r = self.rounds if rounds is None else rounds
+        if self.track:
+            return lambda S, G, G_prev: dynamic.mix_track_traced(
+                S, G, G_prev, L, eta, rounds=r)
+        return lambda S, G, G_prev: dynamic.mix_traced(G, L, eta, rounds=r)

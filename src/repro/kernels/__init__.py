@@ -1,4 +1,5 @@
 """Pallas TPU kernels for the paper's compute hot spots (+ jnp oracles)."""
 from . import ops, ref
 from .ops import gram, power_matmul, flash_attention, fastmix_fused
-from .fastmix import fastmix_poly
+from .fastmix import (fastmix_poly, fastmix_track_fused, fastmix_track_poly,
+                      tracking_update)

@@ -23,6 +23,12 @@ Two fused execution paths are exposed (the ConsensusEngine picks one):
   ``P_K(L)`` is built with K tiny ``(m, m)`` matmuls, then applied with ONE
   pass over the iterate — the same single-HBM-trip structure as the kernel.
 
+Both have *tracked* twins (:func:`fastmix_track_fused` /
+:func:`fastmix_track_poly`) that additionally fold the DeEPCA
+subspace-tracking combine (Eqn. 3.1, :func:`tracking_update`) into the same
+launch, so a full power-iteration gossip costs one HBM read of
+``(S, G, G_prev)`` and one write — no materialised tracked intermediate.
+
 Both agree with the per-round reference to fp32 round-off (property-tested
 in tests/test_consensus.py) and both preserve the agent mean exactly in
 exact arithmetic (``L`` is doubly stochastic, and the recursion's
@@ -40,6 +46,18 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
+
+
+def tracking_update(S: jax.Array, G: jax.Array, G_prev: jax.Array) -> jax.Array:
+    """Eqn. (3.1), the subspace-tracking update — THE single compute site.
+
+    Every substrate (stacked scan, traced-operand scan, unrolled loop,
+    shard_map local slices, the fused-kernel fallbacks, the PowerSGD
+    gradient tracker) routes its tracking arithmetic through this function;
+    the only other place the same arithmetic exists is inside the fused
+    Pallas kernel body below, where it runs on VMEM-resident tiles.
+    """
+    return S + G - G_prev
 
 
 def _fastmix_kernel(eta_ref, l_ref, x_ref, o_ref, *, K: int):
@@ -107,6 +125,95 @@ def fastmix_fused(S: jax.Array, L: jax.Array, eta, K: int, *,
         interpret=interpret,
     )(eta_p, l_p, x_p)
     return out[:m, :n].reshape(S.shape)
+
+
+def _fastmix_track_kernel(eta_ref, l_ref, s_ref, g_ref, gp_ref, o_ref, *,
+                          K: int):
+    """One column tile of the fused tracking+gossip step.
+
+    The subspace-tracking combine (Eqn. 3.1) happens on the VMEM-resident
+    tiles right after load, so the tracked iterate is never materialised in
+    HBM — one fewer full pass over the ``(m, d*k)`` iterate per power
+    iteration than tracking-then-:func:`fastmix_fused`.
+    """
+    eta = eta_ref[0, 0]
+    L = l_ref[...]
+    s = s_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    gp = gp_ref[...].astype(jnp.float32)
+    prev = s + g - gp            # in-register Eqn. (3.1); mirrors tracking_update
+    cur = prev
+    for _ in range(K):
+        mixed = jax.lax.dot_general(
+            L, cur, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        prev, cur = cur, (1.0 + eta) * mixed - eta * prev
+    o_ref[...] = cur
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("K", "block_n", "interpret"))
+def fastmix_track_fused(S: jax.Array, G: jax.Array, G_prev: jax.Array,
+                        L: jax.Array, eta, K: int, *, block_n: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """Fused subspace tracking + all K FastMix rounds in one Pallas launch.
+
+    Semantically ``fastmix_fused(tracking_update(S, G, G_prev), L, eta, K)``,
+    but the tracked iterate is formed tile-by-tile in VMEM instead of making
+    a round-trip through HBM first (the roadmap's "extend the fusion into
+    the tracking update" item).  Same padding/dtype contract as
+    :func:`fastmix_fused`: fp32 MXU arithmetic, fp32 output.
+    """
+    m = S.shape[0]
+    assert S.shape == G.shape == G_prev.shape, (S.shape, G.shape, G_prev.shape)
+    assert L.shape == (m, m), (S.shape, L.shape)
+    if K <= 0:
+        return tracking_update(S, G, G_prev).astype(jnp.float32)
+    n = 1
+    for s_ in S.shape[1:]:
+        n *= s_
+
+    mp = _round_up(m, 8 if interpret else 128)
+    bn = _round_up(min(block_n, n), 128)
+    npad = _round_up(n, bn)
+
+    def _pad(x):
+        return jnp.pad(x.reshape(m, n).astype(jnp.float32),
+                       ((0, mp - m), (0, npad - n)))
+
+    l_p = jnp.pad(L.astype(jnp.float32), ((0, mp - m), (0, mp - m)))
+    eta_p = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    tile = pl.BlockSpec((mp, bn), lambda j: (0, j))
+
+    out = pl.pallas_call(
+        functools.partial(_fastmix_track_kernel, K=int(K)),
+        grid=(npad // bn,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j: (0, 0),
+                         memory_space=pltpu.SMEM),      # eta: traced scalar
+            pl.BlockSpec((mp, mp), lambda j: (0, 0)),   # L: resident
+            tile, tile, tile,                           # S, G, G_prev tiles
+        ],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((mp, npad), jnp.float32),
+        interpret=interpret,
+    )(eta_p, l_p, _pad(S), _pad(G), _pad(G_prev))
+    return out[:m, :n].reshape(S.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("K",))
+def fastmix_track_poly(S: jax.Array, G: jax.Array, G_prev: jax.Array,
+                       L: jax.Array, eta, K: int) -> jax.Array:
+    """Off-TPU fused tracking+gossip: bit-identical to tracking-then-poly.
+
+    The tracked iterate is built by :func:`tracking_update` (the shared
+    compute site) and immediately consumed by :func:`fastmix_poly`'s single
+    ``P_K(L)`` application — XLA fuses the element-wise combine into the
+    one pass over the iterate, so this path also avoids the extra HBM trip
+    while staying bit-for-bit equal to the unfused stacked reference
+    composition ``fastmix_poly(tracking_update(...))``.
+    """
+    return fastmix_poly(tracking_update(S, G, G_prev), L, eta, K)
 
 
 @functools.partial(jax.jit, static_argnames=("K",))

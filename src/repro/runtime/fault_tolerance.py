@@ -195,11 +195,15 @@ def deepca_with_failures(ops, topology, W0, *, k: int, T: int, K: int,
                          allow_disconnected: bool = False) -> Dict[str, Any]:
     """ResilientLoop scenario: DeEPCA that survives mid-run agent deaths.
 
-    Runs stacked DeEPCA in segments between failures.  At each failure the
-    gossip graph is degraded with :func:`degrade_topology` (raising if the
-    survivors disconnect), the run state is compacted with
-    :func:`kill_agents`, and the run resumes from the carried state — round
-    accounting continues across segments via the offset in ``state``.  When
+    Runs the shared :class:`~repro.core.driver.IterationDriver` (through
+    its :func:`~repro.core.algorithms.deepca` wrapper, which owns trace
+    collection) in segments between failures — this runtime contains no
+    iteration body of its own.  At each failure the gossip graph is
+    degraded with :func:`degrade_topology` (raising if the survivors
+    disconnect), the run state is compacted with :func:`kill_agents`, and
+    the driver resumes from the carried ``(S, W, G_prev, offset)`` state —
+    round accounting continues across segments via the offset in
+    ``state``.  When
     ``ckpt_dir`` is given every segment boundary is checkpointed through
     the async checkpointer (the same machinery :class:`ResilientLoop`
     uses); a supervisor can restore the latest segment state with
