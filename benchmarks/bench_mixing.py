@@ -15,6 +15,12 @@ Four entry points:
   times ``IterationDriver.run_batch`` (one compiled vmap-over-problems
   launch) against B sequential driver runs of the same problems and
   reports problems/s plus the batched speedup.
+* :func:`sweep_block_n` (``--block-n [128,256,...]``) — fused-kernel
+  column-tile tuning: times the pallas gossip launch per ``block_n`` value
+  (real kernel on TPU, interpret mode elsewhere) so the roadmap's "tune
+  block_n on real TPU" item is a one-flag experiment; the winning value is
+  deployed with the ``REPRO_FASTMIX_BLOCK_N`` env override (engines built
+  with ``block_n=None`` read it).
 * :func:`sweep_degraded` (``--degraded``) — the fleet-robustness table:
   sweeps dead-agent counts x per-round edge-dropout rates over
   ring/hypercube/er graphs, reporting the surviving spectral gap, the
@@ -210,6 +216,65 @@ def _print_markdown(rows) -> None:
               f"**{speedup:.2f}×** |")
 
 
+# ---------------------------------------------------------- block_n sweep
+
+#: Tile widths for the fused-kernel block_n sweep (the roadmap's "tune
+#: block_n on real TPU" knob; REPRO_FASTMIX_BLOCK_N is the env override).
+BLOCK_N_VALUES = (128, 256, 512, 1024)
+
+BLOCK_N_CONFIGS = [
+    ("ring", 16, 1024, 8, 8),           # the acceptance config
+    ("er", 16, 4096, 8, 8),             # wider column axis: more tiles
+]
+
+QUICK_BLOCK_N_CONFIGS = [
+    ("ring", 8, 256, 8, 4),
+]
+
+
+def sweep_block_n(values=BLOCK_N_VALUES, configs=BLOCK_N_CONFIGS,
+                  reps: int = 20, markdown: bool = False):
+    """Time the fused gossip launch across column-tile widths.
+
+    On TPU this times the real Pallas kernel (the tuning experiment the
+    roadmap asks for); elsewhere the kernel runs in interpret mode — far
+    slower in absolute terms, but it exercises the block_n plumbing
+    end-to-end so the one-flag experiment is already wired when a TPU host
+    picks it up.
+    """
+    from repro.kernels.fastmix import DEFAULT_BLOCK_N
+    on_tpu = jax.default_backend() == "tpu"
+    flavour = "pallas kernel" if on_tpu else "interpret mode"
+    interpret = None if on_tpu else True
+    rows = []
+    rng = np.random.default_rng(0)
+    for (kind, m, d, k, K) in configs:
+        topo = _sweep_topology(kind, m)
+        S = jnp.asarray(rng.standard_normal((m, d, k)), jnp.float32)
+        per = []
+        for bn in values:
+            eng = ConsensusEngine(topo, K=K, backend="pallas",
+                                  interpret=interpret, block_n=int(bn))
+            per.append((int(bn), _median_us(lambda: eng.mix(S), reps)))
+        base = dict(per).get(DEFAULT_BLOCK_N, per[0][1])
+        rows.append(((topo.name, m, d, k, K), per, base))
+    if markdown:
+        print(f"\n### Fused FastMix block_n sweep ({flavour}; "
+              f"default block_n={DEFAULT_BLOCK_N}, "
+              f"override with REPRO_FASTMIX_BLOCK_N)\n")
+        header = "| topology | m | d | k | K | " + " | ".join(
+            f"bn={bn}" for bn, _ in rows[0][1]) + " | best |"
+        print(header)
+        print("|" + "---|" * (5 + len(rows[0][1]) + 1))
+        for (name, m, d, k, K), per, base in rows:
+            best_bn = min(per, key=lambda p: p[1])[0]
+            cells = " | ".join(f"{us:.0f} µs ({base / us:.2f}×)"
+                               for _, us in per)
+            print(f"| {name} | {m} | {d} | {k} | {K} | {cells} | "
+                  f"**bn={best_bn}** |")
+    return rows, flavour
+
+
 # ---------------------------------------------------------- batched sweep
 
 # (B, m, d, k, T, K) grid for run_batch vs sequential driver runs; the
@@ -397,7 +462,9 @@ def _print_degraded_markdown(rows, m: int, K: int, steps: int) -> None:
 
 def _arg_value(flag: str, default=None):
     if flag in sys.argv:
-        return sys.argv[sys.argv.index(flag) + 1]
+        idx = sys.argv.index(flag) + 1
+        if idx < len(sys.argv):         # bare trailing flag -> default
+            return sys.argv[idx]
     return default
 
 
@@ -432,6 +499,24 @@ if __name__ == "__main__":
              "sequential_fresh_us": fus, "speedup_vs_warm": sw,
              "speedup_vs_fresh": sf, "problems_per_s": pps}
             for (B, m, d, k, T, K), bus, wus, fus, sw, sf, pps in rows]
+        ran_any = True
+    if "--block-n" in sys.argv:
+        vals = _arg_value("--block-n")
+        # bare `--block-n` (or `--block-n` followed by another flag) runs
+        # the default width grid; otherwise a comma list: --block-n 128,256
+        if vals is None or vals.startswith("--"):
+            values = BLOCK_N_VALUES
+        else:
+            values = tuple(int(v) for v in vals.split(","))
+        rows, flavour = sweep_block_n(
+            values=values, markdown=True,
+            configs=QUICK_BLOCK_N_CONFIGS if quick else BLOCK_N_CONFIGS,
+            reps=reps or 20)
+        report["block_n"] = {
+            "flavour": flavour,
+            "rows": [{"topology": name, "m": m, "d": d, "k": k, "K": K,
+                      "timings_us": {str(bn): us for bn, us in per}}
+                     for (name, m, d, k, K), per, _ in rows]}
         ran_any = True
     if "--degraded" in sys.argv:
         rows = sweep_degraded(writer=None, markdown=True)

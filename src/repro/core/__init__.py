@@ -8,9 +8,10 @@ from .consensus import (ConsensusEngine, DynamicConsensusEngine,
 from .schedule import TopologySchedule, adjacency_of
 from .operators import (StackedOperators, synthetic_spiked,
                         synthetic_problem_batch, libsvm_like, top_k_eigvecs)
-from .step import PowerStep, qr_orth
+from .step import PowerStep, qr_orth, rebase_carry
 from .driver import BatchRun, DriverRun, IterationDriver, local_apply
 from .algorithms import (deepca, depca, centralized_power_method, sign_adjust,
+                         collect_trace, resolve_engines,
                          DecentralizedPCAResult, PowerTrace,
                          theory_consensus_rounds)
 from .gossip_shard import (DistributedDeEPCA, fastmix_local,
@@ -26,9 +27,10 @@ __all__ = [
     "TopologySchedule", "adjacency_of",
     "StackedOperators", "synthetic_spiked", "synthetic_problem_batch",
     "libsvm_like", "top_k_eigvecs",
-    "PowerStep", "qr_orth",
+    "PowerStep", "qr_orth", "rebase_carry",
     "IterationDriver", "DriverRun", "BatchRun", "local_apply",
     "deepca", "depca", "centralized_power_method", "sign_adjust",
+    "collect_trace", "resolve_engines",
     "DecentralizedPCAResult", "PowerTrace", "theory_consensus_rounds",
     "DistributedDeEPCA", "make_round_fn", "fastmix_local",
     "ring_structure", "hypercube_structure",

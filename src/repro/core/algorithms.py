@@ -88,10 +88,17 @@ def _make_trace(ops: StackedOperators, U: jax.Array,
     }
 
 
-def _resolve_engines(algorithm: str, topology: Optional[Topology], K: int, *,
-                     accelerate: bool, backend: str, engine,
-                     schedule: Optional[TopologySchedule]):
-    """(dynamic, static) engine pair from the public wrapper arguments."""
+def resolve_engines(algorithm: str, topology: Optional[Topology], K: int, *,
+                    accelerate: bool = True, backend: str = "auto",
+                    engine=None,
+                    schedule: Optional[TopologySchedule] = None):
+    """(dynamic, static) engine pair from the public wrapper arguments.
+
+    The shared translation from the paper-facing keyword surface
+    (``topology``/``schedule``/``engine``/``backend``/``accelerate``) to the
+    driver's engine slots — used by :func:`deepca`/:func:`depca` and by the
+    streaming tracker, so every entry point resolves engines identically.
+    """
     if isinstance(engine, DynamicConsensusEngine):
         return engine, None
     if schedule is not None:
@@ -114,9 +121,9 @@ def _run_decentralized(algorithm: str, ops: StackedOperators,
     """Shared deepca/depca wrapper: step + engines -> driver -> trace."""
     if U is None:
         U, _ = top_k_eigvecs(ops.mean_matrix(), k)
-    dyn, eng = _resolve_engines(algorithm, topology, K, accelerate=accelerate,
-                                backend=backend, engine=engine,
-                                schedule=schedule)
+    dyn, eng = resolve_engines(algorithm, topology, K, accelerate=accelerate,
+                               backend=backend, engine=engine,
+                               schedule=schedule)
     rounds0 = iters0 = 0
     carry = None
     if state is not None:
@@ -128,9 +135,9 @@ def _run_decentralized(algorithm: str, ops: StackedOperators,
                                    increasing_consensus=increasing_consensus)
     driver = IterationDriver(step=step, engine=eng, dynamic=dyn)
     run = driver.run(ops, W0, T=T, t0=iters0, carry=carry)
-    trace = _collect_trace(ops, U, run.S_hist, run.W_hist, None,
-                           rounds=run.rounds, rounds0=rounds0,
-                           rates=run.rates)
+    trace = collect_trace(ops, U, run.S_hist, run.W_hist, None,
+                          rounds=run.rounds, rounds0=rounds0,
+                          rates=run.rates)
     spent = int(run.rounds[-1]) if T > 0 else 0
     offset = jnp.asarray([rounds0 + spent, iters0 + T], jnp.int32)
     return DecentralizedPCAResult(W=run.carry[1], trace=trace, name=step.name,
@@ -206,19 +213,35 @@ def depca(ops: StackedOperators, topology: Optional[Topology],
                               increasing_consensus=increasing_consensus)
 
 
-def _collect_trace(ops, U, S_hist, W_hist, K: Optional[int],
-                   rounds: Optional[np.ndarray] = None,
-                   rounds0: int = 0,
-                   rates: Optional[np.ndarray] = None) -> PowerTrace:
+def collect_trace(ops, U, S_hist, W_hist, K: Optional[int] = None,
+                  rounds: Optional[np.ndarray] = None,
+                  rounds0: int = 0,
+                  rates: Optional[np.ndarray] = None) -> PowerTrace:
+    """Per-iteration :class:`PowerTrace` from a driver run's histories.
+
+    ``rounds0`` offsets the cumulative round counter so resumed windows
+    (``deepca(state=...)``, streaming ticks) report resume-continuous
+    ``comm_rounds``.  Shared by the wrapper layer and the streaming
+    tracker — one definition of the paper's diagnostics.  ``U=None``
+    (no ground truth available, e.g. a serving tick that must not pay an
+    eigendecomposition) reports NaN for the two tan-theta curves.
+    """
     T = S_hist.shape[0]
 
     def per_t(S, W):
+        if U is None:
+            nan = jnp.full((), jnp.nan, dtype=S.dtype)
+            return (consensus_error(S), consensus_error(W), nan, nan)
         d = _make_trace(ops, U, S, W, 0)
         return (d["s_consensus"], d["w_consensus"],
                 d["mean_tan_theta"], d["tan_theta_mean"])
 
     s_c, w_c, mtt, ttm = jax.vmap(per_t)(S_hist, W_hist)
     if rounds is None:
+        if K is None:
+            raise ValueError(
+                "collect_trace needs the per-iteration rounds: pass "
+                "rounds= (cumulative, e.g. DriverRun.rounds) or K=")
         rounds = np.arange(1, T + 1, dtype=np.float32) * float(K)
     rounds = np.asarray(rounds, dtype=np.float32) + float(rounds0)
     if rates is None:

@@ -188,6 +188,11 @@ class ConsensusEngine:
         polynomial fallback elsewhere; ``True`` forces the kernel in
         interpret mode on any host (used by the cross-backend parity
         tests).
+      block_n: column-tile width of the fused kernel launches; ``None``
+        (default) resolves through
+        :func:`repro.kernels.fastmix.default_block_n`, i.e. the
+        ``REPRO_FASTMIX_BLOCK_N`` env override, so on-hardware tuning
+        (``bench_mixing.py --block-n``) needs no code change.
     """
 
     topology: Topology
@@ -197,7 +202,7 @@ class ConsensusEngine:
     mesh: Optional[object] = None
     axis: str = AXIS
     interpret: Optional[bool] = None
-    block_n: int = 512
+    block_n: Optional[int] = None
     # per-rounds cache of jitted shard_map mix fns (jax's dispatch cache is
     # keyed on function identity, so rebuilding the closure per call would
     # re-trace every time)
@@ -213,6 +218,9 @@ class ConsensusEngine:
             raise ValueError(
                 f"variant must be one of {VARIANTS}, got {self.variant!r}")
         object.__setattr__(self, "backend", resolve_backend(self.backend))
+        if self.block_n is None:
+            from repro.kernels.fastmix import default_block_n
+            object.__setattr__(self, "block_n", default_block_n())
 
     # ------------------------------------------------------------- scalars
     @property
@@ -379,7 +387,7 @@ class DynamicConsensusEngine:
     mesh: Optional[object] = None
     axis: str = AXIS
     interpret: Optional[bool] = None
-    block_n: int = 512
+    block_n: Optional[int] = None       # None -> fastmix.default_block_n()
     _engines: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False, compare=False)
     _traced_cache: dict = dataclasses.field(
@@ -390,6 +398,9 @@ class DynamicConsensusEngine:
             raise ValueError(
                 f"variant must be one of {VARIANTS}, got {self.variant!r}")
         object.__setattr__(self, "backend", resolve_backend(self.backend))
+        if self.block_n is None:
+            from repro.kernels.fastmix import default_block_n
+            object.__setattr__(self, "block_n", default_block_n())
 
     # ---------------------------------------------------------- per-step
     def topology_at(self, t: int):

@@ -26,7 +26,10 @@ On top of the unified step the driver adds **batched multi-problem
 execution** (:meth:`run_batch`): a ``vmap``-over-problems axis so ONE
 compiled program serves ``B`` independent ``(ops, W0, schedule-offset)``
 PCA problems per launch — the serving substrate ``repro.launch.serve``'s
-``--workload pca`` mode uses for heavy traffic.
+``--workload pca`` mode uses for heavy traffic — and **streaming
+execution** (:meth:`run_stream`): resumed windows over a drifting operator
+stream, one compiled program shared by every tick (the substrate under
+:mod:`repro.streaming`'s online tracker and ``--workload pca-stream``).
 
 Substrate selection (``substrate="auto"``)
 ------------------------------------------
@@ -167,6 +170,38 @@ class IterationDriver:
         fn = {"scan": self._run_scan, "traced_scan": self._run_traced_scan,
               "unrolled": self._run_unrolled}[substrate]
         return fn(ops, W0, carry, T, t0, dt)
+
+    # -------------------------------------------------- streaming substrate
+    def run_stream(self, ticks, W0, *, T: int, t0: int = 0,
+                   carry: Optional[Carry] = None, substrate: str = "auto"):
+        """Streaming substrate: resumed T-iteration windows over an operator
+        stream.
+
+        ``ticks`` is any iterable of :class:`StackedOperators` — one entry
+        per stream tick, each potentially a *different* problem (drifting
+        data).  Every tick warm-starts from the previous tick's resumable
+        ``(S, W, G_prev)`` carry with global-iteration accounting continued
+        (``t0`` advances by ``T`` per tick), and yields that tick's
+        :class:`DriverRun`.  Because the per-problem operators enter the
+        cached jitted programs as *traced operands* (see :meth:`_scan_fn`),
+        every tick after the first reuses one compiled program — the
+        property that makes warm-start online tracking cheap.
+
+        Carrying the tracker state across an operator change is sound: at
+        the end of a tick ``mean(S) == mean(G_prev)`` (Lemma 2), so the
+        first tracked update against the *new* operators restores
+        ``mean(S) == mean(A_new W)`` exactly — the subspace-tracking trick
+        *is* the warm start.  Higher-level drift policy (escalation,
+        tracker restart on abrupt change) lives in
+        :class:`repro.streaming.tracker.StreamingDeEPCA`, which drives this
+        loop tick-by-tick instead of consuming the generator.
+        """
+        for ops in ticks:
+            run = self.run(ops, W0, T=T, t0=t0, carry=carry,
+                           substrate=substrate)
+            carry = run.carry
+            t0 += T
+            yield run
 
     @staticmethod
     def _rebuild_ops(kind: str, arr: jax.Array) -> StackedOperators:

@@ -52,6 +52,23 @@ def qr_orth(S: jax.Array) -> jax.Array:
     return q
 
 
+def rebase_carry(ops, W: jax.Array) -> Carry:
+    """Tracker restart: ``S := G_prev := A_j W_j`` on the *current* operators.
+
+    Re-establishes Lemma 2's ``mean(S) == mean(G)`` invariant for the
+    population/operators in force right now, keeping the warm ``W``.  This
+    is the ONE definition of the subspace-tracker restart, shared by the
+    fault-tolerance runtime (:func:`repro.runtime.fault_tolerance.kill_agents`
+    restarts on the survivor population after an agent death) and the
+    streaming tracker (:class:`repro.streaming.tracker.StreamingDeEPCA`
+    restarts on abrupt data drift) — carrying the old ``S``/``G_prev``
+    across either discontinuity would freeze the stale mean mismatch into a
+    permanent bias floor.
+    """
+    G0 = ops.apply(W)
+    return (G0, W, G0)
+
+
 @dataclasses.dataclass(frozen=True)
 class PowerStep:
     """Alg. 1 / DePCA iteration body as data.

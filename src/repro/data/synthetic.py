@@ -69,27 +69,89 @@ class SyntheticTokenStream:
 
 
 class PrefetchIterator:
-    """Background-thread prefetch (double buffering) over any iterator."""
+    """Background-thread prefetch (double buffering) over any iterator.
+
+    Owns an explicit lifecycle: the worker thread is daemonic (an abandoned
+    iterator can never hang interpreter shutdown) and :meth:`close` — also
+    reachable as a context manager — stops the worker promptly even when it
+    is blocked on a full queue.  Long-lived consumers (the streaming
+    service's ingest path, training loops) should use the ``with`` form;
+    the previous implementation parked the worker forever on ``put()`` when
+    a consumer stopped draining, leaking a thread per abandoned iterator.
+    """
 
     def __init__(self, it: Iterator, depth: int = 2):
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._it = it
         self._done = object()
+        self._stop = threading.Event()
+        self._exhausted = False
+        self._exc: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
+
+    def _put_bounded(self, item) -> bool:
+        """Blocking put that still notices :meth:`close`; True if placed."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def _run(self):
         try:
             for item in self._it:
-                self._q.put(item)
+                if not self._put_bounded(item):
+                    return              # closed: drop the item and exit
+        except BaseException as e:      # surface source errors to consumers
+            self._exc = e
         finally:
-            self._q.put(self._done)
+            # the done sentinel must use the same bounded put: the queue
+            # may be full when the source exhausts, and losing the
+            # sentinel would park the consumer on get() forever
+            self._put_bounded(self._done)
 
     def __iter__(self):
         return self
 
     def __next__(self):
+        if self._exhausted or self._stop.is_set():
+            raise StopIteration
         item = self._q.get()
         if item is self._done:
+            self._exhausted = True
+            if self._exc is not None:   # re-raise the source's exception
+                raise self._exc
             raise StopIteration
         return item
+
+    def close(self) -> None:
+        """Stop the worker and release the queue; idempotent."""
+        self._stop.set()
+        # drain so a put()-blocked worker observes the stop event promptly
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        # wake any consumer parked in __next__'s get(): the drain may have
+        # eaten the worker's sentinel, and a stopped worker won't post one
+        try:
+            self._q.put_nowait(self._done)
+        except queue.Full:
+            pass
+        self._thread.join(timeout=1.0)
+
+    def __enter__(self) -> "PrefetchIterator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass        # interpreter teardown: daemon thread dies anyway

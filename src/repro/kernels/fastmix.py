@@ -37,11 +37,48 @@ coefficients sum to one).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+#: Env var overriding the fused kernels' column-tile width (``block_n``).
+BLOCK_N_ENV = "REPRO_FASTMIX_BLOCK_N"
+
+#: Built-in column-tile width when no override is given.  512 fp32 lanes x
+#: a 128-padded agent axis keeps both iterate buffers + L comfortably in
+#: VMEM for every shipped sweep config; the right value on a real TPU is
+#: hardware-dependent — hence the env override + ``bench_mixing.py
+#: --block-n`` sweep.
+DEFAULT_BLOCK_N = 512
+
+
+def default_block_n() -> int:
+    """The fused kernels' column-tile width: ``$REPRO_FASTMIX_BLOCK_N`` or
+    :data:`DEFAULT_BLOCK_N`.
+
+    Read at *engine construction* (``ConsensusEngine``/
+    ``DynamicConsensusEngine`` resolve ``block_n=None`` through this), so
+    tuning the tile width on real hardware is a one-flag experiment::
+
+        REPRO_FASTMIX_BLOCK_N=1024 python benchmarks/bench_mixing.py --sweep
+
+    Engines built before the env change keep their resolved value.
+    """
+    raw = os.environ.get(BLOCK_N_ENV)
+    if raw is None or raw == "":
+        return DEFAULT_BLOCK_N
+    try:
+        val = int(raw)
+    except ValueError as e:
+        raise ValueError(
+            f"{BLOCK_N_ENV} must be a positive integer, got {raw!r}") from e
+    if val <= 0:
+        raise ValueError(
+            f"{BLOCK_N_ENV} must be a positive integer, got {raw!r}")
+    return val
 
 
 def _round_up(x: int, mult: int) -> int:

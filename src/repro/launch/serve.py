@@ -1,6 +1,6 @@
 """Batched serving drivers: LM prefill+decode, and multi-problem PCA.
 
-Two workloads share this entry point:
+Three workloads share this entry point:
 
 * ``--workload lm`` (default) — prefill + greedy decode loop::
 
@@ -15,6 +15,17 @@ Two workloads share this entry point:
 
       PYTHONPATH=src python -m repro.launch.serve --workload pca \
           --batch 8 --m 16 --d 256 --k-top 4 --iters 30 --rounds 6
+
+* ``--workload pca-stream`` — the streaming subsystem end-to-end: an
+  online :class:`~repro.streaming.tracker.StreamingDeEPCA` warm-starts a
+  few iterations per tick over a drifting stream (prefetched on a
+  background thread), then a ragged one-shot request mix is served
+  through the dynamic-batching :class:`~repro.streaming.service
+  .PCAService` queue::
+
+      PYTHONPATH=src python -m repro.launch.serve --workload pca-stream \
+          --m 8 --d 64 --k-top 4 --ticks 8 --tick-iters 3 --rounds 5 \
+          --requests 24 --max-batch 8
 """
 from __future__ import annotations
 
@@ -100,9 +111,71 @@ def serve_pca(args) -> None:
     print(f"tan_theta: max={max(tans):.3e} mean={np.mean(tans):.3e}")
 
 
+def serve_pca_stream(args) -> None:
+    """Streaming workload: online tracking + dynamic-batching queue."""
+    from repro.core import erdos_renyi, metrics, top_k_eigvecs
+    from repro.data.synthetic import PrefetchIterator
+    from repro.streaming import (AdmissionPolicy, DriftPolicy, PCAService,
+                                 SlowRotationStream, StreamingDeEPCA,
+                                 ragged_requests)
+
+    m, d, k = args.m, args.d, args.k_top
+    topo = erdos_renyi(m, p=0.5, seed=args.seed)
+
+    # --- 1. online tracker over a drifting stream (prefetched ingest) ----
+    stream = SlowRotationStream(m=m, d=d, k=k, n_per_agent=args.n_per_agent,
+                                rate=args.drift_rate, seed=args.seed)
+    tracker = StreamingDeEPCA(
+        k=k, T_tick=args.tick_iters, K=args.rounds, topology=topo,
+        backend="stacked", W0=stream.init_W0(),
+        policy=DriftPolicy(target=args.target))
+    print(f"[stream] m={m} d={d} k={k} rate={args.drift_rate}/tick "
+          f"T_tick={args.tick_iters} K={args.rounds} target={args.target}")
+    t0 = time.perf_counter()
+    with PrefetchIterator(stream.ticks(args.ticks), depth=2) as ticks:
+        for tick in ticks:
+            r = tracker.tick(tick.ops, tick.U)
+            flags = ("R" if r.restarted else "") + ("D" if r.drift else "")
+            print(f"[stream] tick {r.tick:3d}: iters={r.iterations} "
+                  f"rounds={r.comm_rounds:5.0f} tan_theta={r.stat:.2e} "
+                  f"{flags}")
+    dt = time.perf_counter() - t0
+    total = tracker.reports[-1].total_rounds
+    print(f"[stream] {args.ticks} ticks in {dt:.2f}s "
+          f"({total / args.ticks:.1f} comm rounds/tick warm-started)")
+
+    # --- 2. ragged one-shot requests through the dynamic-batching queue --
+    svc = PCAService(topo, T=args.iters, K=args.rounds, backend="stacked",
+                     policy=AdmissionPolicy(max_batch=args.max_batch,
+                                            max_wait=args.max_wait))
+    reqs = ragged_requests(m, d, k, args.requests,
+                           n_base=args.n_per_agent, seed=args.seed)
+    t0 = time.perf_counter()
+    ids = [svc.submit(ops, W0) for ops, W0 in reqs]
+    svc.poll()
+    svc.flush()
+    dt = time.perf_counter() - t0
+    tans = []
+    for rid, (ops, W0) in zip(ids, reqs):
+        resp = svc.result(rid)
+        if resp is None:                 # must survive python -O
+            raise RuntimeError(f"request {rid} was never served")
+        U, _ = top_k_eigvecs(ops.mean_matrix(), resp.W.shape[-1])
+        Wbar = jnp.linalg.qr(jnp.mean(resp.W, axis=0))[0]
+        tans.append(float(metrics.tan_theta_k(U, Wbar)))
+    s = svc.stats
+    print(f"[queue] served {s['served']} ragged requests in {dt:.2f}s "
+          f"({s['served'] / dt:.1f} req/s) over {s['batches']} batches "
+          f"(cold={s['cold_launches']} warm={s['warm_launches']} "
+          f"padded={s['padded_requests']})")
+    print(f"[queue] tan_theta: max={max(tans):.3e} "
+          f"mean={float(np.mean(tans)):.3e}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", default="lm", choices=["lm", "pca"])
+    ap.add_argument("--workload", default="lm",
+                    choices=["lm", "pca", "pca-stream"])
     ap.add_argument("--arch", default="smollm_135m")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -117,9 +190,25 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=30, help="power iterations")
     ap.add_argument("--rounds", type=int, default=6, help="FastMix rounds K")
     ap.add_argument("--reps", type=int, default=10, help="timed launches")
+    # --workload pca-stream knobs
+    ap.add_argument("--ticks", type=int, default=8, help="stream ticks")
+    ap.add_argument("--tick-iters", type=int, default=3,
+                    help="warm-start power iterations per tick")
+    ap.add_argument("--drift-rate", type=float, default=0.03,
+                    help="subspace rotation per tick (radians)")
+    ap.add_argument("--target", type=float, default=None,
+                    help="per-tick tan-theta target (escalates until met)")
+    ap.add_argument("--requests", type=int, default=24,
+                    help="ragged one-shot requests for the queue demo")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="admission policy: batch-size cap")
+    ap.add_argument("--max-wait", type=float, default=0.01,
+                    help="admission policy: max queue wait (s)")
     args = ap.parse_args()
     if args.workload == "pca":
         serve_pca(args)
+    elif args.workload == "pca-stream":
+        serve_pca_stream(args)
     else:
         serve_lm(args)
 

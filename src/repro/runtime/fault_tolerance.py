@@ -154,14 +154,17 @@ def kill_agents(ops, state, dead: List[int]):
 
     Returns ``(ops_surv, state_surv)`` where the operators and the
     resumable ``(S, W, G_prev, offset)`` state keep only surviving rows.
-    The subspace tracker is *restarted* on the survivor population:
-    ``S := G_prev := A_j W_j`` so the Lemma 2 invariant ``mean(S) ==
-    mean(G)`` holds exactly over the survivors — carrying the old ``S``
-    across the failure would freeze the (now unbalanced) mean mismatch into
-    a permanent bias floor.
+    The subspace tracker is *restarted* on the survivor population via
+    :func:`repro.core.step.rebase_carry` (``S := G_prev := A_j W_j``) so the
+    Lemma 2 invariant ``mean(S) == mean(G)`` holds exactly over the
+    survivors — carrying the old ``S`` across the failure would freeze the
+    (now unbalanced) mean mismatch into a permanent bias floor.  The
+    streaming tracker reuses this exact path (``dead=[]``) to restart on
+    abrupt data drift.
     """
     import jax.numpy as jnp
     from repro.core.operators import StackedOperators
+    from repro.core.step import rebase_carry
 
     m = ops.m
     keep = jnp.asarray([i for i in range(m) if i not in set(dead)])
@@ -169,11 +172,10 @@ def kill_agents(ops, state, dead: List[int]):
         ops_surv = StackedOperators(dense=ops.dense[keep])
     else:
         ops_surv = StackedOperators(data=ops.data[keep])
-    S, W, G_prev = state[0], state[1], state[2]
+    W = state[1]
     offset = state[3] if len(state) > 3 else None
-    W_surv = W[keep]
-    G0 = ops_surv.apply(W_surv)
-    state_surv = (G0, W_surv, G0) + (() if offset is None else (offset,))
+    state_surv = rebase_carry(ops_surv, W[keep]) \
+        + (() if offset is None else (offset,))
     return ops_surv, state_surv
 
 

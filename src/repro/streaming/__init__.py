@@ -1,0 +1,32 @@
+"""Streaming subsystem: online subspace tracking + dynamic-batching serving.
+
+Turns the one-shot DeEPCA solver into a continuously-serving system, built
+entirely on the PR-3 step/driver seam (no new iteration loops):
+
+* :mod:`repro.streaming.stream` — deterministic drifting-problem
+  generators (slow subspace rotation, abrupt eigengap shifts, per-agent
+  sample-arrival covariance updates);
+* :mod:`repro.streaming.tracker` — :class:`StreamingDeEPCA`, warm-start
+  online tracking over a stream via the resumable ``(S, W, G_prev,
+  offset)`` state contract, with drift monitoring, adaptive iteration
+  escalation, and tracker restarts through the fault-tolerance path;
+* :mod:`repro.streaming.service` — :class:`PCAService`, a request-queue
+  front-end with shape bucketing + dynamic batching so ragged one-shot
+  PCA requests ride :meth:`~repro.core.driver.IterationDriver.run_batch`'s
+  compiled-program cache.
+
+Entry points: ``python -m repro.launch.serve --workload pca-stream`` and
+``benchmarks/bench_streaming.py``.
+"""
+from .stream import (DriftingStream, EigengapShiftStream, SampleArrivalStream,
+                     SlowRotationStream, StreamTick, ragged_requests)
+from .tracker import (DriftPolicy, StreamingDeEPCA, TickReport,
+                      concat_traces)
+from .service import AdmissionPolicy, PCAResponse, PCAService
+
+__all__ = [
+    "DriftingStream", "SlowRotationStream", "EigengapShiftStream",
+    "SampleArrivalStream", "StreamTick", "ragged_requests",
+    "StreamingDeEPCA", "DriftPolicy", "TickReport", "concat_traces",
+    "PCAService", "AdmissionPolicy", "PCAResponse",
+]
