@@ -27,12 +27,57 @@ DATASETS = {
     "w8a_like": dict(m=50, n=160, d=300),
     "a9a_like": dict(m=50, n=120, d=123),
 }
+#: --quick grid for CI / smoke JSON exports (same statistical shape,
+#: one dataset, shorter horizon, two K points).
+QUICK_DATASETS = {"w8a_like_quick": dict(m=16, n=80, d=120)}
 K_SWEEP = (3, 5, 8, 12)
+QUICK_K_SWEEP = (3, 8)
 T = 100
+QUICK_T = 30
 TOP_K = 5
 
 
-def run_dataset(name: str, spec: dict, writer) -> dict:
+def _time_fn(fn, *args, reps=3):
+    import jax
+    out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready(), out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready(), out)
+    return (time.perf_counter() - t0) / reps
+
+
+def stage_rows(name: str, ops, topo, W0, K: int, writer, json_rows) -> None:
+    """Per-stage step breakdown (apply / mix+track / orth) at this
+    dataset's shape — the regression anchor future PRs diff against."""
+    import jax
+    from repro.core import ConsensusEngine
+    from repro.kernels.cholqr import cholqr2
+
+    eng = ConsensusEngine(topo, K=K, backend="stacked")
+    m = ops.m
+    W = jnp.broadcast_to(W0, (m,) + W0.shape).astype(W0.dtype)
+    apply_fn = jax.jit(ops.apply)
+    G = apply_fn(W)
+    mix = jax.jit(lambda S, G_, Gp: eng.mix_track(S, G_, Gp, rounds=K))
+    S2 = mix(W, G, W)
+    house = jax.jit(lambda x: jnp.linalg.qr(x)[0])
+    chol = jax.jit(cholqr2)
+    stages = {
+        "apply": _time_fn(apply_fn, W),
+        "mix_track": _time_fn(mix, W, G, W),
+        "orth_householder": _time_fn(house, S2),
+        "orth_cholqr2": _time_fn(chol, S2),
+    }
+    for stage, dt in stages.items():
+        row = {"name": f"{name}/stage/{stage}", "us": round(dt * 1e6, 1)}
+        json_rows.append(row)
+        writer.writerow([row["name"], f"{dt * 1e6:.1f}", ""])
+
+
+def run_dataset(name: str, spec: dict, writer, json_rows, *,
+                T_run: int = T, k_sweep=K_SWEEP) -> dict:
     import jax
     jax.config.update("jax_enable_x64", True)   # paper plots reach 1e-12
     ops = libsvm_like(spec["m"], spec["n"], spec["d"], seed=0,
@@ -45,28 +90,37 @@ def run_dataset(name: str, spec: dict, writer) -> dict:
         rng.standard_normal((spec["d"], TOP_K)))[0], jnp.float64)
 
     t0 = time.perf_counter()
-    cen = centralized_power_method(A, W0, iters=T, U=U)
+    cen = centralized_power_method(A, W0, iters=T_run, U=U)
     cen_t = time.perf_counter() - t0
     rows = {}
-    for K in K_SWEEP:
+    for K in k_sweep:
         for algo, fn in (("DeEPCA", deepca), ("DePCA", depca)):
             t0 = time.perf_counter()
-            res = fn(ops, topo, W0, k=TOP_K, T=T, K=K, U=U)
+            res = fn(ops, topo, W0, k=TOP_K, T=T_run, K=K, U=U)
             dt = time.perf_counter() - t0
             tr = res.trace
             final = float(tr.mean_tan_theta[-1])
             rows[(algo, K)] = res
-            writer.writerow([f"{name}/{algo}/K{K}", f"{dt * 1e6 / T:.1f}",
+            writer.writerow([f"{name}/{algo}/K{K}",
+                             f"{dt * 1e6 / T_run:.1f}",
                              f"final_tan={final:.3e}"])
-            for t in range(T):
+            json_rows.append({"name": f"{name}/{algo}/K{K}",
+                              "us": round(dt * 1e6 / T_run, 1),
+                              "final_tan": final,
+                              "rounds": float(tr.comm_rounds[-1])})
+            for t in range(T_run):
                 writer.writerow([
                     f"{name}.curve.{algo}.K{K}.t{t}",
                     f"{float(tr.comm_rounds[t]):.0f}",
                     f"s_cons={float(tr.s_consensus[t]):.3e};"
                     f"w_cons={float(tr.w_consensus[t]):.3e};"
                     f"tan={float(tr.mean_tan_theta[t]):.3e}"])
-    writer.writerow([f"{name}/CPCA", f"{cen_t * 1e6 / T:.1f}",
+    writer.writerow([f"{name}/CPCA", f"{cen_t * 1e6 / T_run:.1f}",
                      f"final_tan={float(cen['tan_theta'][-1]):.3e}"])
+    json_rows.append({"name": f"{name}/CPCA",
+                      "us": round(cen_t * 1e6 / T_run, 1),
+                      "final_tan": float(cen["tan_theta"][-1])})
+    stage_rows(name, ops, topo, W0, max(k_sweep), writer, json_rows)
     return {"cen": cen, "rows": rows, "topo": topo, "name": name}
 
 
@@ -104,16 +158,33 @@ def plot(result) -> None:
     plt.close(fig)
 
 
-def main(writer=None) -> None:
+def main(writer=None, quick: bool = False):
     import sys
     own = writer is None
     if own:
         writer = csv.writer(sys.stdout)
         writer.writerow(["name", "us_per_call", "derived"])
-    for name, spec in DATASETS.items():
-        res = run_dataset(name, spec, writer)
+    json_rows: list = []
+    datasets = QUICK_DATASETS if quick else DATASETS
+    for name, spec in datasets.items():
+        res = run_dataset(name, spec, writer, json_rows,
+                          T_run=QUICK_T if quick else T,
+                          k_sweep=QUICK_K_SWEEP if quick else K_SWEEP)
         plot(res)
+    return json_rows
 
 
 if __name__ == "__main__":
-    main()
+    import json
+    import sys
+    quick = "--quick" in sys.argv
+    json_path = None
+    if "--json" in sys.argv:
+        json_path = sys.argv[sys.argv.index("--json") + 1]
+    rows = main(quick=quick)
+    if json_path is not None:
+        from repro.kernels import autotune
+        with open(json_path, "w") as f:
+            json.dump({"bench": "deepca", "device": autotune.device_kind(),
+                       "quick": quick, "rows": rows}, f, indent=1)
+        print(f"\n[json] wrote {json_path}", file=sys.stderr)

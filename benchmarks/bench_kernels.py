@@ -1,9 +1,40 @@
 """Pallas kernel benches (interpret mode on CPU = correctness-scale timings;
-the BlockSpec tiling is the TPU deliverable).  Reports kernel vs jnp-oracle
-wall time and the analytic v5e roofline time for each shape."""
+the BlockSpec tiling is the TPU deliverable) + the PR-5 per-iteration
+step-path breakdown.
+
+Sections
+--------
+* kernel-vs-oracle rows (gram / power_matmul / flash): kernel wall time vs
+  the jnp oracle and the analytic v5e roofline time, as before.
+* ``orth`` rows: batched CholeskyQR2 (``kernels/cholqr.py``) vs the seed
+  ``jnp.linalg.qr`` Householder path across (m, d, k) shapes, with
+  orthonormality and subspace-parity columns.
+* ``step`` rows: the full DeEPCA per-iteration compute path — local apply,
+  mix+track, orthonormalization — timed stage by stage and end to end for
+  the *seed* path (unfused apply -> fused-poly ``mix_track`` -> Householder
+  QR, i.e. the PR-4 state) vs the *fast* path
+  (``engine.apply_mix_track`` -> CholeskyQR2).  The ``parity`` column is
+  the sign-adjusted max-abs difference between the two paths' iterates.
+* ``fused`` rows: bit-equality of the engine's ``apply_mix_track`` poly
+  fallback vs the explicit ``local_apply`` + ``mix_track`` composition,
+  and interpret-mode kernel parity for ``apply_track_fused``.
+
+Every parity/orthonormality row carries its tolerance and an ``ok`` flag;
+:func:`main` raises ``RuntimeError`` after reporting if any row failed, so
+the CI quick-bench job gates on numerical health, not just on running.
+
+CLI
+---
+``--json PATH`` exports the rows (+ host metadata); ``--quick`` shrinks the
+shape grid for CI; ``--record`` writes the measured per-shape
+orthonormalization winner into the persistent autotune cache
+(``{"householder": 0|1}`` under kernel ``cholqr`` — consulted by
+``core/step.qr_orth``), closing the measure→deploy loop.
+"""
 from __future__ import annotations
 
 import csv
+import json
 import sys
 import time
 
@@ -11,11 +42,28 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
+from repro.kernels.cholqr import cholqr2
 from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
 
+#: (m, d, k, K) step-path shapes; the k sweep shows the CholeskyQR2
+#: crossover (Householder's panel cost grows with k^2 and never
+#: vectorises; the ISSUE's "dominates step time at large k" regime).
+STEP_SHAPES = [(16, 512, 8, 8), (16, 1024, 16, 8), (16, 1024, 32, 8)]
+QUICK_STEP_SHAPES = [(8, 256, 8, 4), (8, 256, 16, 4)]
 
-def _time(fn, *args, reps=3):
+ORTH_SHAPES = [(16, 512, 8), (16, 1024, 8), (16, 1024, 16), (16, 1024, 32),
+               (50, 300, 5)]
+QUICK_ORTH_SHAPES = [(8, 256, 8), (8, 256, 16)]
+
+#: Step-path parity tolerance (fp32, sign-adjusted iterates; both paths
+#: run identical HIGHEST-precision matmul math up to summation order).
+PARITY_TOL = 5e-5
+#: Orthonormality tolerance for CholeskyQR2 output (fp32).
+ORTH_TOL = 5e-6
+
+
+def _time(fn, *args, reps=5):
     fn(*args)  # compile
     t0 = time.perf_counter()
     for _ in range(reps):
@@ -24,47 +72,230 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def main(writer=None) -> None:
-    own = writer is None
-    if own:
-        writer = csv.writer(sys.stdout)
-        writer.writerow(["name", "us_per_call", "derived"])
+def _row(writer, rows, name, us, **extras):
+    rows.append({"name": name, "us": round(float(us), 2), **extras})
+    derived = ";".join(f"{k}={v:.3e}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in extras.items())
+    writer.writerow([name, f"{us:.1f}", derived])
 
+
+def _orth_err(Q):
+    k = Q.shape[-1]
+    return float(jnp.max(jnp.abs(
+        jnp.einsum("...dk,...dl->...kl", Q, Q) - jnp.eye(k, dtype=Q.dtype))))
+
+
+def _subspace_err(Q, Qref):
+    P = jnp.einsum("...dk,...ek->...de", Q, Q)
+    Pr = jnp.einsum("...dk,...ek->...de", Qref, Qref)
+    return float(jnp.max(jnp.abs(P - Pr)))
+
+
+# ------------------------------------------------------------ bench pieces
+def kernel_rows(writer, rows, quick: bool) -> None:
+    """The original kernel-vs-oracle section (gram/power_matmul/flash)."""
     rng = np.random.default_rng(0)
-    # gram: paper Eqn. 5.1 covariance formation
-    for n, d in ((512, 256), (1024, 512)):
+    gram_shapes = ((512, 256),) if quick else ((512, 256), (1024, 512))
+    for n, d in gram_shapes:
         x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
         t_ref = _time(lambda a: ref.gram_ref(a), x)
         t_k = _time(lambda a: ops.gram(a, interpret=True), x)
         flops = 2 * n * d * d
         v5e = max(flops / PEAK_FLOPS, (n * d + d * d) * 4 / HBM_BW)
-        writer.writerow([f"kernel/gram/{n}x{d}", f"{t_k * 1e6:.1f}",
-                         f"ref_us={t_ref * 1e6:.1f};"
-                         f"v5e_roofline_us={v5e * 1e6:.2f}"])
-    # power_matmul: Alg. 1 local power step
-    for d, k in ((512, 8), (1024, 32)):
+        _row(writer, rows, f"kernel/gram/{n}x{d}", t_k * 1e6,
+             ref_us=round(t_ref * 1e6, 1), v5e_roofline_us=v5e * 1e6)
+    pm_shapes = ((512, 8),) if quick else ((512, 8), (1024, 32))
+    for d, k in pm_shapes:
         a = jnp.asarray(rng.standard_normal((d, d)), jnp.float32)
         w = jnp.asarray(rng.standard_normal((d, k)), jnp.float32)
         t_ref = _time(lambda *z: ref.power_matmul_ref(*z), a, w)
         t_k = _time(lambda *z: ops.power_matmul(*z, interpret=True), a, w)
         flops = 2 * d * d * k
         v5e = max(flops / PEAK_FLOPS, (d * d + 2 * d * k) * 4 / HBM_BW)
-        writer.writerow([f"kernel/power_matmul/{d}x{k}", f"{t_k * 1e6:.1f}",
-                         f"ref_us={t_ref * 1e6:.1f};"
-                         f"v5e_roofline_us={v5e * 1e6:.2f}"])
-    # flash attention
-    for s, hd in ((256, 64),):
-        q = jnp.asarray(rng.standard_normal((1, 4, s, hd)), jnp.float32)
-        kv = jnp.asarray(rng.standard_normal((1, 4, s, hd)), jnp.float32)
-        t_ref = _time(lambda *z: ref.mha_ref(*z), q, kv, kv)
-        t_k = _time(lambda *z: ops.flash_attention(
-            *z, block_q=64, block_kv=64, interpret=True), q, kv, kv)
-        flops = 4 * 4 * s * s * hd
-        v5e = flops / PEAK_FLOPS
-        writer.writerow([f"kernel/flash/{s}x{hd}", f"{t_k * 1e6:.1f}",
-                         f"ref_us={t_ref * 1e6:.1f};"
-                         f"v5e_roofline_us={v5e * 1e6:.2f}"])
+        _row(writer, rows, f"kernel/power_matmul/{d}x{k}", t_k * 1e6,
+             ref_us=round(t_ref * 1e6, 1), v5e_roofline_us=v5e * 1e6)
+    if not quick:
+        for s, hd in ((256, 64),):
+            q = jnp.asarray(rng.standard_normal((1, 4, s, hd)), jnp.float32)
+            kv = jnp.asarray(rng.standard_normal((1, 4, s, hd)), jnp.float32)
+            t_ref = _time(lambda *z: ref.mha_ref(*z), q, kv, kv)
+            t_k = _time(lambda *z: ops.flash_attention(
+                *z, block_q=64, block_kv=64, interpret=True), q, kv, kv)
+            flops = 4 * 4 * s * s * hd
+            _row(writer, rows, f"kernel/flash/{s}x{hd}", t_k * 1e6,
+                 ref_us=round(t_ref * 1e6, 1),
+                 v5e_roofline_us=flops / PEAK_FLOPS * 1e6)
+
+
+def orth_rows(writer, rows, quick: bool, record: bool) -> None:
+    """CholeskyQR2 vs Householder across shapes (the Eqn. 3.3 hot spot)."""
+    rng = np.random.default_rng(1)
+    house = jax.jit(lambda x: jnp.linalg.qr(x)[0])
+    chol = jax.jit(cholqr2)
+    for m, d, k in (QUICK_ORTH_SHAPES if quick else ORTH_SHAPES):
+        X = jnp.asarray(rng.standard_normal((m, d, k)), jnp.float32)
+        t_h = _time(house, X)
+        t_c = _time(chol, X)
+        Q, Qh = chol(X), house(X)
+        orth = _orth_err(Q)
+        sub = _subspace_err(Q, Qh)
+        _row(writer, rows, f"orth/cholqr2/{m}x{d}x{k}", t_c * 1e6,
+             householder_us=round(t_h * 1e6, 1),
+             speedup=round(t_h / t_c, 2), orth=orth, subspace_vs_qr=sub,
+             tol=ORTH_TOL, ok=bool(orth < ORTH_TOL and sub < ORTH_TOL))
+        if record:
+            key = autotune.record(
+                "cholqr", (d, k), X.dtype,
+                {"householder": int(t_h < t_c),
+                 "us": round(min(t_h, t_c) * 1e6, 1)})
+            print(f"[autotune] recorded {key}: "
+                  f"{'householder' if t_h < t_c else 'cholqr2'}",
+                  file=sys.stderr)
+
+
+def _step_setup(m, d, k, seed=0):
+    from repro.core import ConsensusEngine, erdos_renyi
+    from repro.core.operators import StackedOperators
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((m, d, d)).astype(np.float32) / np.sqrt(d)
+    A = (A + A.transpose(0, 2, 1)) / 2
+    ops_ = StackedOperators(dense=jnp.asarray(A))
+    topo = erdos_renyi(m, p=0.5, seed=seed)
+    W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((d, k)))[0],
+                     jnp.float32)
+    W = jnp.broadcast_to(W0, (m, d, k)).astype(jnp.float32)
+    eng = ConsensusEngine(topo, K=1, backend="pallas")    # rounds per call
+    return ops_, eng, W0, W
+
+
+def step_rows(writer, rows, quick: bool) -> bool:
+    """Per-stage + end-to-end step path: seed (PR-4) vs fast (PR-5).
+
+    Returns True when every parity check passed.
+    """
+    from repro.core.step import sign_adjust
+    all_ok = True
+    for m, d, k, K in (QUICK_STEP_SHAPES if quick else STEP_SHAPES):
+        ops_, eng, W0, W = _step_setup(m, d, k)
+        S = Gp = W
+
+        apply_fn = jax.jit(ops_.apply)
+        mix_track = jax.jit(
+            lambda S_, G_, Gp_: eng.mix_track(S_, G_, Gp_, rounds=K))
+        house = jax.jit(lambda x: jnp.linalg.qr(x)[0])
+        chol = jax.jit(cholqr2)
+
+        @jax.jit
+        def step_seed(S_, W_, Gp_):
+            G = ops_.apply(W_)
+            S2 = eng.mix_track(S_, G, Gp_, rounds=K)
+            return S2, sign_adjust(jnp.linalg.qr(S2)[0], W0), G
+
+        @jax.jit
+        def step_fast(S_, W_, Gp_):
+            S2, G = eng.apply_mix_track(S_, W_, Gp_, ops_, rounds=K)
+            return S2, sign_adjust(cholqr2(S2), W0), G
+
+        G = apply_fn(W)
+        t_apply = _time(apply_fn, W)
+        t_mix = _time(mix_track, S, G, Gp)
+        t_house = _time(house, mix_track(S, G, Gp))
+        t_chol = _time(chol, mix_track(S, G, Gp))
+        t_seed = _time(step_seed, S, W, Gp)
+        t_fast = _time(step_fast, S, W, Gp)
+
+        _, Ws, _ = step_seed(S, W, Gp)
+        _, Wf, _ = step_fast(S, W, Gp)
+        parity = float(jnp.max(jnp.abs(Ws - Wf)))
+        ok = parity < PARITY_TOL
+        all_ok &= ok
+        name = f"step/{m}x{d}x{k}/K{K}"
+        _row(writer, rows, f"{name}/apply", t_apply * 1e6)
+        _row(writer, rows, f"{name}/mix_track", t_mix * 1e6)
+        _row(writer, rows, f"{name}/orth_householder", t_house * 1e6)
+        _row(writer, rows, f"{name}/orth_cholqr2", t_chol * 1e6,
+             speedup=round(t_house / t_chol, 2))
+        _row(writer, rows, f"{name}/full_seed", t_seed * 1e6)
+        _row(writer, rows, f"{name}/full_fast", t_fast * 1e6,
+             speedup=round(t_seed / t_fast, 2), parity=parity,
+             tol=PARITY_TOL, ok=ok)
+    return all_ok
+
+
+def fused_rows(writer, rows, quick: bool) -> bool:
+    """apply_mix_track contract rows: poly-fallback bit-equality + kernel
+    interpret-mode parity.  Returns True when both hold."""
+    from repro.core import ConsensusEngine, erdos_renyi
+    from repro.core.operators import StackedOperators
+    rng = np.random.default_rng(2)
+    m, d, k, K = 8, 48, 3, 5
+    A = rng.standard_normal((m, d, d)).astype(np.float32) / np.sqrt(d)
+    ops_ = StackedOperators(dense=jnp.asarray((A + A.transpose(0, 2, 1)) / 2))
+    topo = erdos_renyi(m, p=0.5, seed=3)
+    S, W, Gp = (jnp.asarray(rng.standard_normal((m, d, k)), jnp.float32)
+                for _ in range(3))
+
+    # host-independent composition reference (explicit poly fallback)
+    from repro.core.mixing import fastmix_eta
+    from repro.kernels import fastmix as fm
+    L = jnp.asarray(topo.mixing, jnp.float32)
+    eta = fastmix_eta(topo.lambda2)
+    G_c = ops_.apply(W)
+    S_c = fm.fastmix_track_poly(S, G_c, Gp, L, eta, K)
+
+    # poly fallback == explicit composition, bit for bit (acceptance pin).
+    # Only meaningful off-TPU: on a TPU host backend="pallas" fires the
+    # real apply_track_fused kernel (different summation order), so there
+    # the row is skipped rather than asserting a fallback that cannot run.
+    ok_bit = True
+    if jax.default_backend() != "tpu":
+        eng = ConsensusEngine(topo, K=K, backend="pallas")
+        S_f, G_f = eng.apply_mix_track(S, W, Gp, ops_)
+        bit = float(jnp.max(jnp.abs(S_f - S_c))
+                    + jnp.max(jnp.abs(G_f - G_c)))
+        ok_bit = bit == 0.0
+        _row(writer, rows, "fused/apply_track/poly_bit_equal", 0.0,
+             max_abs_diff=bit, tol=0.0, ok=ok_bit)
+
+    # interpret-mode kernel vs the composition (fp32 tolerance)
+    engi = ConsensusEngine(topo, K=K, backend="pallas", interpret=True)
+    S_k, G_k = engi.apply_mix_track(S, W, Gp, ops_)
+    scale = float(jnp.max(jnp.abs(S_c))) + 1.0
+    err = max(float(jnp.max(jnp.abs(S_k - S_c))),
+              float(jnp.max(jnp.abs(G_k - G_c))))
+    ok_kern = err < 2e-5 * scale
+    _row(writer, rows, "fused/apply_track/kernel_parity", 0.0,
+         max_abs_diff=err, tol=2e-5 * scale, ok=ok_kern)
+    return ok_bit and ok_kern
+
+
+def main(writer=None, quick: bool = False, record: bool = False,
+         json_path=None):
+    own = writer is None
+    if own:
+        writer = csv.writer(sys.stdout)
+        writer.writerow(["name", "us_per_call", "derived"])
+    rows: list = []
+    kernel_rows(writer, rows, quick)
+    orth_rows(writer, rows, quick, record)
+    ok_step = step_rows(writer, rows, quick)
+    ok_fused = fused_rows(writer, rows, quick)
+    if json_path is not None:      # export BEFORE the parity gate, so a
+        with open(json_path, "w") as f:    # failing run still ships rows
+            json.dump({"bench": "kernels",
+                       "device": autotune.device_kind(),
+                       "quick": quick, "rows": rows}, f, indent=1)
+        print(f"\n[json] wrote {json_path}", file=sys.stderr)
+    bad = [r["name"] for r in rows if r.get("ok") is False]
+    if not (ok_step and ok_fused) or bad:
+        raise RuntimeError(f"kernel bench parity rows out of tolerance: {bad}")
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    argv = sys.argv[1:]
+    json_path = None
+    if "--json" in argv:
+        json_path = argv[argv.index("--json") + 1]
+    main(quick="--quick" in argv, record="--record" in argv,
+         json_path=json_path)

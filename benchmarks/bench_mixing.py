@@ -233,7 +233,8 @@ QUICK_BLOCK_N_CONFIGS = [
 
 
 def sweep_block_n(values=BLOCK_N_VALUES, configs=BLOCK_N_CONFIGS,
-                  reps: int = 20, markdown: bool = False):
+                  reps: int = 20, markdown: bool = False,
+                  record: bool = False):
     """Time the fused gossip launch across column-tile widths.
 
     On TPU this times the real Pallas kernel (the tuning experiment the
@@ -241,7 +242,14 @@ def sweep_block_n(values=BLOCK_N_VALUES, configs=BLOCK_N_CONFIGS,
     slower in absolute terms, but it exercises the block_n plumbing
     end-to-end so the one-flag experiment is already wired when a TPU host
     picks it up.
+
+    ``record=True`` (CLI ``--record``) writes each config's winning width
+    into the persistent autotune cache (kernel ``fastmix``, keyed on the
+    kernel-facing ``(m, d*k)`` bucket), which every engine built with
+    ``block_n=None`` then picks up automatically — the measure→deploy loop
+    with no env var needed (``REPRO_FASTMIX_BLOCK_N`` still wins when set).
     """
+    from repro.kernels import autotune
     from repro.kernels.fastmix import DEFAULT_BLOCK_N
     on_tpu = jax.default_backend() == "tpu"
     flavour = "pallas kernel" if on_tpu else "interpret mode"
@@ -258,6 +266,13 @@ def sweep_block_n(values=BLOCK_N_VALUES, configs=BLOCK_N_CONFIGS,
             per.append((int(bn), _median_us(lambda: eng.mix(S), reps)))
         base = dict(per).get(DEFAULT_BLOCK_N, per[0][1])
         rows.append(((topo.name, m, d, k, K), per, base))
+        if record:
+            best_bn, best_us = min(per, key=lambda p: p[1])
+            key = autotune.record("fastmix", (m, d * k), S.dtype,
+                                  {"block_n": best_bn,
+                                   "us": round(best_us, 1)})
+            print(f"[autotune] recorded {key}: block_n={best_bn}",
+                  file=sys.stderr)
     if markdown:
         print(f"\n### Fused FastMix block_n sweep ({flavour}; "
               f"default block_n={DEFAULT_BLOCK_N}, "
@@ -511,7 +526,7 @@ if __name__ == "__main__":
         rows, flavour = sweep_block_n(
             values=values, markdown=True,
             configs=QUICK_BLOCK_N_CONFIGS if quick else BLOCK_N_CONFIGS,
-            reps=reps or 20)
+            reps=reps or 20, record="--record" in sys.argv)
         report["block_n"] = {
             "flavour": flavour,
             "rows": [{"topology": name, "m": m, "d": d, "k": k, "K": K,

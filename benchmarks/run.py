@@ -4,23 +4,63 @@ Prints ``name,us_per_call,derived`` CSV to stdout.
 
   bench_deepca      -- paper Figs. 1-2 (DeEPCA/DePCA/CPCA, K sweep, 3 metrics)
   bench_mixing      -- Prop. 1 (FastMix vs naive gossip contraction)
-  bench_kernels     -- Pallas kernels vs jnp oracle + v5e roofline
+  bench_kernels     -- Pallas kernels vs jnp oracle + v5e roofline, CholeskyQR2
+                       vs Householder, and the per-iteration step breakdown
   bench_compression -- DeEPCA-PowerSGD wire bytes + fidelity
+
+``--json`` additionally writes the perf-trajectory files at the **repo
+root** — ``BENCH_kernels.json`` (kernel + per-stage step breakdown: apply,
+mix+track, orth, full seed-vs-fast path) and ``BENCH_deepca.json``
+(paper-workload convergence + its stage breakdown) — which are committed so
+future PRs can regress against the recorded numbers; CI uploads fresh
+copies as artifacts.  ``--quick`` shrinks every grid for smoke runs.
+
+Runs both as a script (``python benchmarks/run.py``) and as a module
+(``python -m benchmarks.run``).
 """
 from __future__ import annotations
 
 import csv
+import json
+import os
 import sys
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def main() -> None:
-    from . import bench_compression, bench_deepca, bench_kernels, bench_mixing
+
+def _import_benches():
+    try:        # module style: python -m benchmarks.run
+        from . import (bench_compression, bench_deepca, bench_kernels,
+                       bench_mixing)
+    except ImportError:   # script style: python benchmarks/run.py
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        import bench_compression, bench_deepca, bench_kernels, bench_mixing
+    return bench_compression, bench_deepca, bench_kernels, bench_mixing
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
+    want_json = "--json" in argv
+    bench_compression, bench_deepca, bench_kernels, bench_mixing = \
+        _import_benches()
     writer = csv.writer(sys.stdout)
     writer.writerow(["name", "us_per_call", "derived"])
     bench_mixing.main(writer)
-    bench_kernels.main(writer)
+    kernel_rows = bench_kernels.main(writer, quick=quick)
     bench_compression.main(writer)
-    bench_deepca.main(writer)
+    deepca_rows = bench_deepca.main(writer, quick=quick)
+    if want_json:
+        from repro.kernels import autotune
+        device = autotune.device_kind()
+        for fname, bench, rows in (
+                ("BENCH_kernels.json", "kernels", kernel_rows),
+                ("BENCH_deepca.json", "deepca", deepca_rows)):
+            path = os.path.join(REPO_ROOT, fname)
+            with open(path, "w") as f:
+                json.dump({"bench": bench, "device": device, "quick": quick,
+                           "rows": rows}, f, indent=1)
+            print(f"[json] wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -86,11 +86,12 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from .mixing import fastmix, fastmix_eta, naive_mix
+from .mixing import fastmix, fastmix_eta, fastmix_wire, naive_mix
 from .topology import Topology
 
 BACKENDS = ("auto", "stacked", "pallas", "shard_map")
 VARIANTS = ("fastmix", "naive")
+WIRE_DTYPES = (None, "bf16")
 
 #: Default mesh-axis name for the shard_map backend.
 AXIS = "agents"
@@ -124,9 +125,16 @@ def _resolve_mesh(mesh, m: int, axis: str):
     return Mesh(np.asarray(devs), (axis,))
 
 
+def _use_pallas_kernel(interpret: Optional[bool]) -> bool:
+    """True when the pallas backend runs the real kernel (TPU) or the
+    interpret-mode kernel (tests); False -> the algebraic fallback."""
+    return interpret is True or jax.default_backend() == "tpu"
+
+
 def _fused_track_mix(S: jax.Array, G: jax.Array, G_prev: jax.Array,
                      L: jax.Array, eta, rounds: int, *,
-                     interpret: Optional[bool], block_n: int) -> jax.Array:
+                     interpret: Optional[bool], block_n: Optional[int],
+                     wire: bool = False) -> jax.Array:
     """Fused tracking+gossip dispatch (pallas backend, static and dynamic).
 
     Same dtype/precision contract as :func:`_fused_mix`; the subspace-
@@ -135,36 +143,53 @@ def _fused_track_mix(S: jax.Array, G: jax.Array, G_prev: jax.Array,
     """
     from repro.kernels import fastmix as _fm
     if S.dtype == jnp.float64:
-        return _fm.fastmix_track_poly(S, G, G_prev, L.astype(jnp.float64),
-                                      eta, rounds)
+        x = _fm.tracking_update(S, G, G_prev)
+        L64 = L.astype(jnp.float64)
+        if wire:
+            return fastmix_wire(x, L64, eta, rounds)
+        return _fm.fastmix_poly(x, L64, eta, rounds)
     L32 = L.astype(jnp.float32)
-    if interpret is True or jax.default_backend() == "tpu":
+    if _use_pallas_kernel(interpret):
         out = _fm.fastmix_track_fused(S, G, G_prev, L32, eta, rounds,
                                       block_n=block_n,
-                                      interpret=interpret is True)
+                                      interpret=interpret is True,
+                                      wire_bf16=wire)
         return out.astype(S.dtype)
-    return _fm.fastmix_track_poly(S, G, G_prev, L32, eta,
-                                  rounds).astype(S.dtype)
+    x = _fm.tracking_update(S, G, G_prev)
+    if wire:        # quantization is nonlinear: no P_K(L) collapse exists
+        return fastmix_wire(x.astype(jnp.float32), L32, eta,
+                            rounds).astype(S.dtype)
+    return _fm.fastmix_poly(x.astype(jnp.float32), L32, eta,
+                            rounds).astype(S.dtype)
 
 
 def _fused_mix(S: jax.Array, L: jax.Array, eta, rounds: int, *,
-               interpret: Optional[bool], block_n: int) -> jax.Array:
+               interpret: Optional[bool], block_n: Optional[int],
+               wire: bool = False) -> jax.Array:
     """Fused-backend dispatch shared by the static and dynamic engines.
 
     fp32 accumulation in both fused paths; cast back so the engine
     preserves the caller's dtype like the stacked reference does.
     Exception: f64 iterates (x64 workloads chasing <1e-8 targets) must not
     round-trip through fp32, so they take the polynomial path in full f64 —
-    still fused, no precision cliff.
+    still fused, no precision cliff.  ``wire`` (bf16 wire mode) forces the
+    per-round path off-TPU: quantized sends cannot be collapsed into
+    ``P_K(L)``.
     """
     from repro.kernels import fastmix as _fm
     if S.dtype == jnp.float64:
-        return _fm.fastmix_poly(S, L.astype(jnp.float64), eta, rounds)
+        L64 = L.astype(jnp.float64)
+        if wire:
+            return fastmix_wire(S, L64, eta, rounds)
+        return _fm.fastmix_poly(S, L64, eta, rounds)
     L32 = L.astype(jnp.float32)
-    if interpret is True or jax.default_backend() == "tpu":
+    if _use_pallas_kernel(interpret):
         out = _fm.fastmix_fused(S, L32, eta, rounds, block_n=block_n,
-                                interpret=interpret is True)
+                                interpret=interpret is True, wire_bf16=wire)
         return out.astype(S.dtype)
+    if wire:
+        return fastmix_wire(S.astype(jnp.float32), L32, eta,
+                            rounds).astype(S.dtype)
     return _fm.fastmix_poly(S, L32, eta, rounds).astype(S.dtype)
 
 
@@ -189,10 +214,18 @@ class ConsensusEngine:
         interpret mode on any host (used by the cross-backend parity
         tests).
       block_n: column-tile width of the fused kernel launches; ``None``
-        (default) resolves through
-        :func:`repro.kernels.fastmix.default_block_n`, i.e. the
-        ``REPRO_FASTMIX_BLOCK_N`` env override, so on-hardware tuning
-        (``bench_mixing.py --block-n``) needs no code change.
+        (default, recommended) defers to the kernels, which resolve it at
+        trace time through ``REPRO_FASTMIX_BLOCK_N`` and then the
+        persistent autotune cache (:mod:`repro.kernels.autotune`) keyed on
+        (device kind, shape bucket, dtype) — so a tuned machine runs tuned
+        tiles with no engine change.
+      wire_dtype: gossip **wire** precision — ``None`` (full precision) or
+        ``"bf16"``: each round's *sent* iterate is rounded to bf16
+        (halving wire bytes) while the tracking combine, the Chebyshev
+        recursion state and the QR all keep accumulating in fp32 (f64
+        stays f64).  Supported on the ``stacked`` and ``pallas`` backends;
+        per-round quantization cannot collapse into ``P_K(L)``, so the
+        off-TPU pallas fallback runs the per-round wire loop.
     """
 
     topology: Topology
@@ -203,6 +236,7 @@ class ConsensusEngine:
     axis: str = AXIS
     interpret: Optional[bool] = None
     block_n: Optional[int] = None
+    wire_dtype: Optional[str] = None
     # per-rounds cache of jitted shard_map mix fns (jax's dispatch cache is
     # keyed on function identity, so rebuilding the closure per call would
     # re-trace every time)
@@ -218,9 +252,15 @@ class ConsensusEngine:
             raise ValueError(
                 f"variant must be one of {VARIANTS}, got {self.variant!r}")
         object.__setattr__(self, "backend", resolve_backend(self.backend))
-        if self.block_n is None:
-            from repro.kernels.fastmix import default_block_n
-            object.__setattr__(self, "block_n", default_block_n())
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"wire_dtype must be one of {WIRE_DTYPES}, got "
+                f"{self.wire_dtype!r}")
+        if self.wire_dtype is not None and self.backend == "shard_map":
+            raise ValueError(
+                "wire_dtype is not supported on the shard_map backend "
+                "(collective rounds run at the mesh's native precision); "
+                "use stacked or pallas")
 
     # ------------------------------------------------------------- scalars
     @property
@@ -267,6 +307,8 @@ class ConsensusEngine:
                 f"{self.topology.m}")
         if self.backend == "stacked":
             L = self._L(S.dtype)
+            if self.wire_dtype is not None:
+                return fastmix_wire(S, L, self.eta, r)
             if self.variant == "naive":
                 return naive_mix(S, L, r)
             return fastmix(S, L, self.eta, r)
@@ -292,14 +334,48 @@ class ConsensusEngine:
             dtype = jnp.float64 if S.dtype == jnp.float64 else jnp.float32
             return _fused_track_mix(S, G, G_prev, self._L(dtype), self.eta,
                                     r, interpret=self.interpret,
-                                    block_n=self.block_n)
+                                    block_n=self.block_n,
+                                    wire=self.wire_dtype is not None)
         from repro.kernels.fastmix import tracking_update
         return self.mix(tracking_update(S, G, G_prev), rounds=rounds)
+
+    def apply_mix_track(self, S: jax.Array, W: jax.Array, G_prev: jax.Array,
+                        ops, rounds: Optional[int] = None):
+        """The whole gossip half-iteration, fused: local apply + Eqn. (3.1)
+        combine + Eqn. (3.2) gossip -> ``(S_new, G)``.
+
+        On the ``pallas`` backend with *dense* operators the
+        :func:`repro.kernels.fastmix.apply_track_fused` kernel computes
+        ``G = A_j W_j`` tile-by-tile and feeds ``S + G - G_prev`` straight
+        into the Chebyshev rounds — ``G`` is written to HBM exactly once
+        (as the next ``G_prev``) instead of written-then-reread between two
+        launches.  Everywhere else (Gram-form data operators, off-TPU
+        hosts, f64, non-pallas backends) it is the bit-equal composition
+        ``ops.apply`` + :meth:`mix_track` — which on the off-TPU pallas
+        backend IS the poly fallback the acceptance test pins.
+        """
+        r = self.K if rounds is None else int(rounds)
+        if (self.backend == "pallas" and r > 0 and ops.dense is not None
+                and S.dtype != jnp.float64
+                and _use_pallas_kernel(self.interpret)):
+            if S.shape[0] != self.topology.m:
+                raise ValueError(
+                    f"leading (agent) axis {S.shape[0]} != topology m="
+                    f"{self.topology.m}")
+            from repro.kernels.fastmix import apply_track_fused
+            S_new, G = apply_track_fused(
+                ops.dense, W, S, G_prev, self._L(jnp.float32), self.eta, r,
+                interpret=self.interpret is True,
+                wire_bf16=self.wire_dtype is not None)
+            return S_new.astype(S.dtype), G.astype(S.dtype)
+        G = ops.apply(W)
+        return self.mix_track(S, G, G_prev, rounds=rounds), G
 
     def _mix_fused(self, S: jax.Array, rounds: int) -> jax.Array:
         dtype = jnp.float64 if S.dtype == jnp.float64 else jnp.float32
         return _fused_mix(S, self._L(dtype), self.eta, rounds,
-                          interpret=self.interpret, block_n=self.block_n)
+                          interpret=self.interpret, block_n=self.block_n,
+                          wire=self.wire_dtype is not None)
 
     def _mix_shard_map(self, S: jax.Array, rounds: int) -> jax.Array:
         fn = self._sharded_mix_cache.get(rounds)
@@ -387,7 +463,8 @@ class DynamicConsensusEngine:
     mesh: Optional[object] = None
     axis: str = AXIS
     interpret: Optional[bool] = None
-    block_n: Optional[int] = None       # None -> fastmix.default_block_n()
+    block_n: Optional[int] = None       # None -> kernels resolve (autotune)
+    wire_dtype: Optional[str] = None    # None / "bf16" (see ConsensusEngine)
     _engines: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False, compare=False)
     _traced_cache: dict = dataclasses.field(
@@ -398,9 +475,15 @@ class DynamicConsensusEngine:
             raise ValueError(
                 f"variant must be one of {VARIANTS}, got {self.variant!r}")
         object.__setattr__(self, "backend", resolve_backend(self.backend))
-        if self.block_n is None:
-            from repro.kernels.fastmix import default_block_n
-            object.__setattr__(self, "block_n", default_block_n())
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(
+                f"wire_dtype must be one of {WIRE_DTYPES}, got "
+                f"{self.wire_dtype!r}")
+        if self.wire_dtype is not None and self.backend == "shard_map":
+            raise ValueError(
+                "wire_dtype is not supported on the shard_map backend "
+                "(collective rounds run at the mesh's native precision); "
+                "use stacked or pallas")
 
     # ---------------------------------------------------------- per-step
     def topology_at(self, t: int):
@@ -420,7 +503,8 @@ class DynamicConsensusEngine:
             eng = ConsensusEngine(
                 topology=topo, K=self.K, backend=self.backend,
                 variant=self.variant, mesh=self.mesh, axis=self.axis,
-                interpret=self.interpret, block_n=self.block_n)
+                interpret=self.interpret, block_n=self.block_n,
+                wire_dtype=self.wire_dtype)
             self._engines[key] = eng
         return eng
 
@@ -463,10 +547,13 @@ class DynamicConsensusEngine:
         if r <= 0:
             return S
         if self.backend == "stacked":
+            if self.wire_dtype is not None:
+                return fastmix_wire(S, L.astype(S.dtype), eta, r)
             return fastmix(S, L.astype(S.dtype), eta, r)
         if self.backend == "pallas":
             return _fused_mix(S, L, eta, r, interpret=self.interpret,
-                              block_n=self.block_n)
+                              block_n=self.block_n,
+                              wire=self.wire_dtype is not None)
         return self._mix_shard_map_traced(S, L, eta, r)
 
     def mix_track_traced(self, S: jax.Array, G: jax.Array, G_prev: jax.Array,
@@ -483,10 +570,35 @@ class DynamicConsensusEngine:
         if self.backend == "pallas" and r > 0:
             return _fused_track_mix(S, G, G_prev, L, eta, r,
                                     interpret=self.interpret,
-                                    block_n=self.block_n)
+                                    block_n=self.block_n,
+                                    wire=self.wire_dtype is not None)
         from repro.kernels.fastmix import tracking_update
         return self.mix_traced(tracking_update(S, G, G_prev), L, eta,
                                rounds=rounds)
+
+    def apply_mix_track_traced(self, S: jax.Array, W: jax.Array,
+                               G_prev: jax.Array, ops, L: jax.Array, eta,
+                               rounds: Optional[int] = None):
+        """Traced-operand counterpart of
+        :meth:`ConsensusEngine.apply_mix_track` -> ``(S_new, G)``.
+
+        The fused kernel takes ``(L, eta)`` as traced operands like every
+        other dynamic path — graph swaps never retrace; the composition
+        fallback keeps the bit-equality contract everywhere the kernel
+        does not fire.
+        """
+        r = self.K if rounds is None else int(rounds)
+        if (self.backend == "pallas" and r > 0 and ops.dense is not None
+                and S.dtype != jnp.float64
+                and _use_pallas_kernel(self.interpret)):
+            from repro.kernels.fastmix import apply_track_fused
+            S_new, G = apply_track_fused(
+                ops.dense, W, S, G_prev, L.astype(jnp.float32), eta, r,
+                interpret=self.interpret is True,
+                wire_bf16=self.wire_dtype is not None)
+            return S_new.astype(S.dtype), G.astype(S.dtype)
+        G = ops.apply(W)
+        return self.mix_track_traced(S, G, G_prev, L, eta, rounds=rounds), G
 
     def _mix_shard_map_traced(self, S, L, eta, rounds: int):
         # the dense all_gather round is the only lowering valid for EVERY

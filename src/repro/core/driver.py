@@ -22,6 +22,16 @@ sharing the single :class:`~repro.core.step.PowerStep` body:
     :class:`~repro.core.gossip_shard.DistributedDeEPCA` loops over (agents
     = devices along a named mesh axis).
 
+Every substrate that owns its operators statically (scan, traced scan,
+unrolled, run_batch — and run_stream, which resumes windows through
+``run``) hands the step the engine's fused ``apply_mix_track`` entry point
+(PR 5): on the pallas backend with dense operators the local apply, the
+Eqn. (3.1) combine and all K gossip rounds run in ONE kernel launch; on
+every other path it is the bit-equal ``ops.apply`` + ``mix_track``
+composition, so substrates never fork numerically.  The ``shard_map``
+builders keep the explicit composition (the collective gossip rounds
+cannot fuse with the local matmul launch).
+
 On top of the unified step the driver adds **batched multi-problem
 execution** (:meth:`run_batch`): a ``vmap``-over-problems axis so ONE
 compiled program serves ``B`` independent ``(ops, W0, schedule-offset)``
@@ -213,14 +223,15 @@ class IterationDriver:
         key = ("scan", T, kind)
         fn = self._run_cache.get(key)
         if fn is None:
-            step = self.step
-            mix = step.make_mix(self.engine)
+            step, eng = self.step, self.engine
+            mix = step.make_mix(eng)
 
             def scan_fn(arr, W0, carry):
                 ops = self._rebuild_ops(kind, arr)
+                apply_mix = step.make_apply_mix(eng, ops)
 
                 def body(c, _):
-                    return step(c, mix, W0, ops.apply)
+                    return step(c, mix, W0, ops.apply, apply_mix=apply_mix)
 
                 return jax.lax.scan(body, carry, None, length=T)
 
@@ -239,8 +250,11 @@ class IterationDriver:
 
                 def body(c, xs):
                     L_t, eta_t = xs
-                    return step(c, step.make_mix_traced(dyn, L_t, eta_t),
-                                W0, ops.apply)
+                    return step(
+                        c, step.make_mix_traced(dyn, L_t, eta_t), W0,
+                        ops.apply,
+                        apply_mix=step.make_apply_mix_traced(dyn, ops, L_t,
+                                                             eta_t))
 
                 return jax.lax.scan(body, carry, (Ls, etas), length=T)
 
@@ -275,14 +289,18 @@ class IterationDriver:
             total += r
             if dyn is not None:
                 topo_t = dyn.topology_at(t)
-                mix = step.make_mix_traced(
-                    dyn, jnp.asarray(topo_t.mixing, dt), dyn.eta_of(topo_t),
-                    rounds=r)
+                L_t = jnp.asarray(topo_t.mixing, dt)
+                eta_t = dyn.eta_of(topo_t)
+                mix = step.make_mix_traced(dyn, L_t, eta_t, rounds=r)
+                apply_mix = step.make_apply_mix_traced(dyn, ops, L_t, eta_t,
+                                                       rounds=r)
                 rates.append(float(dyn.contraction_rates(t, 1, rounds=r)[0]))
             else:
                 mix = step.make_mix(eng, rounds=r)
+                apply_mix = step.make_apply_mix(eng, ops, rounds=r)
                 rates.append(eng.contraction_rate(r))
-            carry, (S_t, W_t) = step(carry, mix, W0, ops.apply)
+            carry, (S_t, W_t) = step(carry, mix, W0, ops.apply,
+                                     apply_mix=apply_mix)
             S_hist.append(S_t)
             W_hist.append(W_t)
             rounds.append(total)
@@ -390,9 +408,10 @@ class IterationDriver:
                      else StackedOperators(data=arr))
             carry = step.init_carry(ops_b, W0_b)
             mix = step.make_mix(eng)
+            apply_mix = step.make_apply_mix(eng, ops_b)
 
             def body(c, _):
-                return step(c, mix, W0_b, ops_b.apply)
+                return step(c, mix, W0_b, ops_b.apply, apply_mix=apply_mix)
 
             carry, hists = jax.lax.scan(body, carry, None, length=T)
             return carry, (hists if with_history else ())
@@ -404,8 +423,11 @@ class IterationDriver:
 
             def body(c, xs):
                 L_t, eta_t = xs
-                return step(c, step.make_mix_traced(dyn, L_t, eta_t), W0_b,
-                            ops_b.apply)
+                return step(
+                    c, step.make_mix_traced(dyn, L_t, eta_t), W0_b,
+                    ops_b.apply,
+                    apply_mix=step.make_apply_mix_traced(dyn, ops_b, L_t,
+                                                         eta_t))
 
             carry, hists = jax.lax.scan(body, carry, (Ls_b, etas_b),
                                         length=T)

@@ -71,6 +71,38 @@ def fastmix(S: jax.Array, L: jax.Array, eta: jax.Array | float, K: int) -> jax.A
     return out
 
 
+@functools.partial(jax.jit, static_argnames=("K", "wire_dtype"))
+def fastmix_wire(S: jax.Array, L: jax.Array, eta: jax.Array | float, K: int,
+                 wire_dtype=jnp.bfloat16) -> jax.Array:
+    """FastMix with reduced **wire** precision: the per-round stacked
+    reference for the engines' ``wire_dtype="bf16"`` mode.
+
+    Each round, the value an agent *sends* is rounded to ``wire_dtype``
+    (bf16 halves wire bytes vs fp32) through
+    :func:`repro.kernels.fastmix.quantize_wire` — the single quantization
+    compute site, shared with the fused kernels' ``wire_bf16`` path — while
+    the Chebyshev recursion state and every receiver's combine stay in the
+    full compute dtype.  Quantization is nonlinear, so unlike full-precision
+    FastMix this CANNOT be collapsed into one ``P_K(L)`` application; the
+    off-TPU fused fallback for wire mode is therefore this per-round loop.
+
+    ``eta=0.0`` degenerates to naive gossip with a bf16 wire, so both
+    engine variants support wire mode.
+    """
+    if K <= 0:
+        return S
+    from repro.kernels.fastmix import quantize_wire
+
+    def body(_, carry):
+        prev, cur = carry
+        nxt = (1.0 + eta) * _mix_once(L, quantize_wire(cur, wire_dtype)) \
+            - eta * prev
+        return (cur, nxt)
+
+    _, out = jax.lax.fori_loop(0, K, body, (S, S))
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("K",))
 def naive_mix(S: jax.Array, L: jax.Array, K: int) -> jax.Array:
     """K rounds of plain gossip ``S <- L S`` (Xiao & Boyd 2004 baseline)."""

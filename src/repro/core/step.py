@@ -29,7 +29,7 @@ site.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,9 +47,23 @@ def sign_adjust(W: jax.Array, W0: jax.Array) -> jax.Array:
 def qr_orth(S: jax.Array) -> jax.Array:
     """Eqn. (3.3): per-agent thin-QR orthonormalisation (batched over any
     leading axes — works on stacked ``(m, d, k)`` and local ``(1, d, k)``
-    slices alike)."""
-    q, _ = jnp.linalg.qr(S)
-    return q
+    slices alike).
+
+    THE single orthonormalization compute site: every substrate, the
+    streaming tracker/service, and the serve CLI route through here, so
+    the implementation swap below reaches all of them at once.  Since PR 5
+    it routes through batched CholeskyQR2
+    (:func:`repro.kernels.cholqr.qr_orth` — Gram → Cholesky → small-matrix
+    solve, twice, with a shifted-rescue pass for ill-conditioned factors),
+    which replaces Householder panels with pure batched matmul work.  Up
+    to column signs the result matches ``jnp.linalg.qr`` to round-off, and
+    every algorithm call site applies Alg. 2 ``sign_adjust`` right after,
+    which absorbs exactly that ambiguity.  ``REPRO_QR_IMPL=householder``
+    (or a recorded autotune-cache winner) restores the LAPACK path
+    per-process or per shape bucket.
+    """
+    from repro.kernels.cholqr import qr_orth as _impl
+    return _impl(S)
 
 
 def rebase_carry(ops, W: jax.Array) -> Carry:
@@ -121,7 +135,8 @@ class PowerStep:
     def __call__(self, carry: Carry,
                  mix: Callable[[jax.Array, jax.Array, jax.Array], jax.Array],
                  W0: jax.Array,
-                 apply_fn: Callable[[jax.Array], jax.Array]
+                 apply_fn: Callable[[jax.Array], jax.Array],
+                 apply_mix: Optional[Callable] = None
                  ) -> Tuple[Carry, Tuple[jax.Array, jax.Array]]:
         """One power iteration — the single definition of the Alg. 1 body.
 
@@ -132,12 +147,21 @@ class PowerStep:
             ``mix_track`` family for ``track=True``) and the gossip rounds.
           W0: the common initialisation, for Alg. 2 sign adjustment.
           apply_fn: the local power step ``W -> A_j W_j``.
+          apply_mix: optional fused half-iteration ``(S, W, G_prev) ->
+            (S_new, G)`` (the engine's ``apply_mix_track`` family) that
+            subsumes ``apply_fn`` + ``mix`` in one call — on the pallas
+            backend with dense operators, one kernel launch.  Only
+            meaningful for tracking steps; when absent (or ``track=False``)
+            the classic two-call composition runs, bit-identically.
         Returns:
           ``(new_carry, (S_new, W_new))`` — scan-body shaped.
         """
         S, W, G_prev = carry
-        G = apply_fn(W)                       # A_j W_j^t   (local compute)
-        S_new = mix(S, G, G_prev)             # Eqns. (3.1)+(3.2) fused in mix
+        if apply_mix is not None and self.track:
+            S_new, G = apply_mix(S, W, G_prev)    # fused Eqns. apply+(3.1)+(3.2)
+        else:
+            G = apply_fn(W)                   # A_j W_j^t   (local compute)
+            S_new = mix(S, G, G_prev)         # Eqns. (3.1)+(3.2) fused in mix
         W_new = sign_adjust(qr_orth(S_new), W0)   # Eqn. (3.3) + Alg. 2
         return (S_new, W_new, G), (S_new, W_new)
 
@@ -158,3 +182,23 @@ class PowerStep:
             return lambda S, G, G_prev: dynamic.mix_track_traced(
                 S, G, G_prev, L, eta, rounds=r)
         return lambda S, G, G_prev: dynamic.mix_traced(G, L, eta, rounds=r)
+
+    def make_apply_mix(self, engine, ops, rounds: int = None):
+        """Fused ``apply_mix`` callable for one iteration on a static
+        engine, or ``None`` for non-tracking steps (DePCA gossips the raw
+        power step; there is nothing to fuse the apply *into*)."""
+        if not self.track:
+            return None
+        r = self.rounds if rounds is None else rounds
+        return lambda S, W, G_prev: engine.apply_mix_track(S, W, G_prev,
+                                                           ops, rounds=r)
+
+    def make_apply_mix_traced(self, dynamic, ops, L, eta,
+                              rounds: int = None):
+        """Traced-operand ``apply_mix`` for one scan step on a dynamic
+        engine (``None`` for non-tracking steps)."""
+        if not self.track:
+            return None
+        r = self.rounds if rounds is None else rounds
+        return lambda S, W, G_prev: dynamic.apply_mix_track_traced(
+            S, W, G_prev, ops, L, eta, rounds=r)

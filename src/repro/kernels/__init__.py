@@ -1,5 +1,13 @@
-"""Pallas TPU kernels for the paper's compute hot spots (+ jnp oracles)."""
-from . import ops, ref
-from .ops import gram, power_matmul, flash_attention, fastmix_fused
+"""Pallas TPU kernels for the paper's compute hot spots (+ jnp oracles).
+
+PR 5 additions: batched CholeskyQR2 orthonormalization (:mod:`.cholqr`),
+the fused apply→track→mix launch (:func:`.fastmix.apply_track_fused`),
+bf16 wire-precision gossip (``wire_bf16=``/:func:`.fastmix.quantize_wire`)
+and the persistent block-size autotuner (:mod:`.autotune`) every kernel's
+``block_* = None`` defaults consult.
+"""
+from . import autotune, cholqr, ops, ref
+from .ops import (apply_track_fused, cholqr2, fastmix_fused, flash_attention,
+                  gram, power_matmul)
 from .fastmix import (fastmix_poly, fastmix_track_fused, fastmix_track_poly,
-                      tracking_update)
+                      quantize_wire, tracking_update)

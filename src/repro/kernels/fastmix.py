@@ -37,48 +37,57 @@ coefficients sum to one).
 from __future__ import annotations
 
 import functools
-import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import autotune
+
 #: Env var overriding the fused kernels' column-tile width (``block_n``).
 BLOCK_N_ENV = "REPRO_FASTMIX_BLOCK_N"
 
-#: Built-in column-tile width when no override is given.  512 fp32 lanes x
-#: a 128-padded agent axis keeps both iterate buffers + L comfortably in
-#: VMEM for every shipped sweep config; the right value on a real TPU is
-#: hardware-dependent — hence the env override + ``bench_mixing.py
-#: --block-n`` sweep.
+#: Built-in column-tile width when neither the env override nor an
+#: autotune-cache entry decides.  512 fp32 lanes x a 128-padded agent axis
+#: keeps both iterate buffers + L comfortably in VMEM for every shipped
+#: sweep config; the right value per TPU generation comes from the
+#: ``bench_mixing.py --block-n --record`` sweep through the autotune cache.
 DEFAULT_BLOCK_N = 512
 
 
-def default_block_n() -> int:
-    """The fused kernels' column-tile width: ``$REPRO_FASTMIX_BLOCK_N`` or
-    :data:`DEFAULT_BLOCK_N`.
+def default_block_n(shape=None, dtype=jnp.float32) -> int:
+    """The fused kernels' column-tile width for ``shape``.
 
-    Read at *engine construction* (``ConsensusEngine``/
-    ``DynamicConsensusEngine`` resolve ``block_n=None`` through this), so
-    tuning the tile width on real hardware is a one-flag experiment::
-
-        REPRO_FASTMIX_BLOCK_N=1024 python benchmarks/bench_mixing.py --sweep
-
-    Engines built before the env change keep their resolved value.
+    Resolution precedence (PR-5 autotuner contract, shared by every
+    kernel): the ``REPRO_FASTMIX_BLOCK_N`` env override, then the
+    persistent autotune-cache entry for
+    ``(fastmix, device kind, shape bucket, dtype)`` when ``shape`` (the
+    kernel-facing ``(m, columns)``) is given, then
+    :data:`DEFAULT_BLOCK_N`.  The kernels consult this through their
+    ``block_n=None`` defaults at trace time, so a tuned machine runs tuned
+    tiles with no code or env change; programs traced before a cache/env
+    change keep their resolved value.
     """
-    raw = os.environ.get(BLOCK_N_ENV)
-    if raw is None or raw == "":
-        return DEFAULT_BLOCK_N
-    try:
-        val = int(raw)
-    except ValueError as e:
-        raise ValueError(
-            f"{BLOCK_N_ENV} must be a positive integer, got {raw!r}") from e
-    if val <= 0:
-        raise ValueError(
-            f"{BLOCK_N_ENV} must be a positive integer, got {raw!r}")
-    return val
+    return autotune.resolve("fastmix", "block_n",
+                            shape if shape is not None else (),
+                            dtype, env=BLOCK_N_ENV,
+                            default=DEFAULT_BLOCK_N)
+
+
+def quantize_wire(x: jax.Array, wire_dtype=jnp.bfloat16) -> jax.Array:
+    """Round-trip through the wire dtype: THE bf16 wire-precision compute
+    site.
+
+    Emulates reduced-precision gossip: the value an agent *sends* each
+    round is rounded to ``wire_dtype`` (halving wire bytes for bf16), while
+    every receiver keeps accumulating in the full compute dtype.  Both the
+    per-round stacked reference (:func:`repro.core.mixing.fastmix_wire`)
+    and the fused kernels' ``wire_bf16`` path quantize through this exact
+    rounding, so they agree to fp32 round-off.
+    """
+    return x.astype(wire_dtype).astype(x.dtype)
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -97,23 +106,46 @@ def tracking_update(S: jax.Array, G: jax.Array, G_prev: jax.Array) -> jax.Array:
     return S + G - G_prev
 
 
-def _fastmix_kernel(eta_ref, l_ref, x_ref, o_ref, *, K: int):
-    """One column tile: run all K rounds with prev/cur resident in VMEM."""
-    eta = eta_ref[0, 0]
-    L = l_ref[...]
-    prev = x_ref[...].astype(jnp.float32)
-    cur = prev
+def _rounds(L, prev, cur, eta, K: int, wire_bf16: bool):
+    """The K unrolled Chebyshev rounds shared by every fused kernel body.
+
+    With ``wire_bf16`` the value each agent *sends* is rounded to bf16
+    (mirroring :func:`quantize_wire`) while ``prev``/``cur`` — the local
+    recursion state — stay fp32, i.e. reduced wire precision with
+    full-precision accumulation.
+    """
     for _ in range(K):      # K is small and static: unrolled, no HBM traffic
+        sent = (cur.astype(jnp.bfloat16).astype(jnp.float32)
+                if wire_bf16 else cur)
         mixed = jax.lax.dot_general(
-            L, cur, (((1,), (0,)), ((), ())),
+            L, sent, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         prev, cur = cur, (1.0 + eta) * mixed - eta * prev
-    o_ref[...] = cur
+    return cur
 
 
-@functools.partial(jax.jit, static_argnames=("K", "block_n", "interpret"))
+def _fastmix_kernel(eta_ref, l_ref, x_ref, o_ref, *, K: int,
+                    wire_bf16: bool):
+    """One column tile: run all K rounds with prev/cur resident in VMEM."""
+    eta = eta_ref[0, 0]
+    prev = x_ref[...].astype(jnp.float32)
+    o_ref[...] = _rounds(l_ref[...], prev, prev, eta, K, wire_bf16)
+
+
+def _block_n_for(S, block_n: Optional[int]) -> int:
+    """Resolve a kernel call's column-tile width (explicit > env > cache >
+    default); the cache key is the kernel-facing ``(m, columns)`` shape."""
+    if block_n is not None:
+        return int(block_n)
+    n = 1
+    for s in S.shape[1:]:
+        n *= s
+    return default_block_n((S.shape[0], n), S.dtype)
+
+
 def fastmix_fused(S: jax.Array, L: jax.Array, eta, K: int, *,
-                  block_n: int = 512, interpret: bool = False) -> jax.Array:
+                  block_n: Optional[int] = None, interpret: bool = False,
+                  wire_bf16: bool = False) -> jax.Array:
     """All K FastMix rounds in one Pallas launch.
 
     Args:
@@ -126,9 +158,22 @@ def fastmix_fused(S: jax.Array, L: jax.Array, eta, K: int, *,
       eta: FastMix momentum (``eta=0.0`` degenerates to fused naive gossip
          ``L^K S``).
       K: number of gossip rounds (static, unrolled inside the kernel).
+      block_n: column-tile width; ``None`` resolves through
+        :func:`default_block_n` (env override > autotune cache > default).
+      wire_bf16: round each round's *sent* iterate to bf16 (wire-precision
+        mode); accumulation stays fp32.
     Returns:
       ``(m, ...)`` mixed variables in fp32, same logical shape as ``S``.
     """
+    return _fastmix_fused(S, L, eta, K, block_n=_block_n_for(S, block_n),
+                          interpret=interpret, wire_bf16=wire_bf16)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "block_n", "interpret",
+                                             "wire_bf16"))
+def _fastmix_fused(S: jax.Array, L: jax.Array, eta, K: int, *,
+                   block_n: int, interpret: bool,
+                   wire_bf16: bool) -> jax.Array:
     if K <= 0:
         return S.astype(jnp.float32)
     m = S.shape[0]
@@ -149,7 +194,7 @@ def fastmix_fused(S: jax.Array, L: jax.Array, eta, K: int, *,
     eta_p = jnp.asarray(eta, jnp.float32).reshape(1, 1)
 
     out = pl.pallas_call(
-        functools.partial(_fastmix_kernel, K=int(K)),
+        functools.partial(_fastmix_kernel, K=int(K), wire_bf16=wire_bf16),
         grid=(npad // bn,),
         in_specs=[
             pl.BlockSpec((1, 1), lambda j: (0, 0),
@@ -165,7 +210,7 @@ def fastmix_fused(S: jax.Array, L: jax.Array, eta, K: int, *,
 
 
 def _fastmix_track_kernel(eta_ref, l_ref, s_ref, g_ref, gp_ref, o_ref, *,
-                          K: int):
+                          K: int, wire_bf16: bool):
     """One column tile of the fused tracking+gossip step.
 
     The subspace-tracking combine (Eqn. 3.1) happens on the VMEM-resident
@@ -174,33 +219,36 @@ def _fastmix_track_kernel(eta_ref, l_ref, s_ref, g_ref, gp_ref, o_ref, *,
     iteration than tracking-then-:func:`fastmix_fused`.
     """
     eta = eta_ref[0, 0]
-    L = l_ref[...]
     s = s_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
     gp = gp_ref[...].astype(jnp.float32)
     prev = s + g - gp            # in-register Eqn. (3.1); mirrors tracking_update
-    cur = prev
-    for _ in range(K):
-        mixed = jax.lax.dot_general(
-            L, cur, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        prev, cur = cur, (1.0 + eta) * mixed - eta * prev
-    o_ref[...] = cur
+    o_ref[...] = _rounds(l_ref[...], prev, prev, eta, K, wire_bf16)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("K", "block_n", "interpret"))
 def fastmix_track_fused(S: jax.Array, G: jax.Array, G_prev: jax.Array,
-                        L: jax.Array, eta, K: int, *, block_n: int = 512,
-                        interpret: bool = False) -> jax.Array:
+                        L: jax.Array, eta, K: int, *,
+                        block_n: Optional[int] = None,
+                        interpret: bool = False,
+                        wire_bf16: bool = False) -> jax.Array:
     """Fused subspace tracking + all K FastMix rounds in one Pallas launch.
 
     Semantically ``fastmix_fused(tracking_update(S, G, G_prev), L, eta, K)``,
     but the tracked iterate is formed tile-by-tile in VMEM instead of making
     a round-trip through HBM first (the roadmap's "extend the fusion into
-    the tracking update" item).  Same padding/dtype contract as
-    :func:`fastmix_fused`: fp32 MXU arithmetic, fp32 output.
+    the tracking update" item).  Same padding/dtype/``block_n``-resolution
+    contract as :func:`fastmix_fused`: fp32 MXU arithmetic, fp32 output.
     """
+    return _fastmix_track_fused(S, G, G_prev, L, eta, K,
+                                block_n=_block_n_for(S, block_n),
+                                interpret=interpret, wire_bf16=wire_bf16)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "block_n", "interpret",
+                                             "wire_bf16"))
+def _fastmix_track_fused(S: jax.Array, G: jax.Array, G_prev: jax.Array,
+                         L: jax.Array, eta, K: int, *, block_n: int,
+                         interpret: bool, wire_bf16: bool) -> jax.Array:
     m = S.shape[0]
     assert S.shape == G.shape == G_prev.shape, (S.shape, G.shape, G_prev.shape)
     assert L.shape == (m, m), (S.shape, L.shape)
@@ -223,7 +271,8 @@ def fastmix_track_fused(S: jax.Array, G: jax.Array, G_prev: jax.Array,
     tile = pl.BlockSpec((mp, bn), lambda j: (0, j))
 
     out = pl.pallas_call(
-        functools.partial(_fastmix_track_kernel, K=int(K)),
+        functools.partial(_fastmix_track_kernel, K=int(K),
+                          wire_bf16=wire_bf16),
         grid=(npad // bn,),
         in_specs=[
             pl.BlockSpec((1, 1), lambda j: (0, 0),
@@ -278,3 +327,149 @@ def fastmix_poly(S: jax.Array, L: jax.Array, eta: jax.Array | float,
     (_, P), _ = jax.lax.scan(body, (I, I), None, length=K)
     return jnp.einsum("ij,j...->i...", P, S,
                       precision=jax.lax.Precision.HIGHEST)
+
+
+# --------------------------------------------------------------------------
+# apply -> track -> mix fusion: the whole DeEPCA gossip half-iteration in
+# one launch (PR 5 tentpole b).
+# --------------------------------------------------------------------------
+def _apply_track_kernel(eta_ref, l_ref, a_ref, w_ref, s_ref, gp_ref,
+                        snew_ref, g_ref, *, K: int, n_s: int,
+                        wire_bf16: bool):
+    """One (d-row block, contraction block) grid step.
+
+    The contraction axis is innermost: the ``G`` output block stays
+    resident in VMEM while ``G_j = A_j W_j`` accumulates across it (TPU
+    grid revisiting semantics, exactly like the `gram` kernel); on the last
+    contraction step the Eqn. (3.1) combine and all K Chebyshev rounds run
+    on the still-resident tiles and write the mixed block once.  ``G``
+    itself is written once as a second output (the next iteration's
+    ``G_prev``) — it never makes the HBM round-trip between the local apply
+    and the gossip that the unfused composition pays.
+    """
+    sidx = pl.program_id(1)
+
+    @pl.when(sidx == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    # per-agent local power step: (mp, bd, be) x (mp, be, kp) batched over
+    # the agent axis -> accumulate (mp, bd, kp)
+    g_ref[...] += jax.lax.dot_general(
+        a_ref[...], w_ref[...], (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(sidx == n_s - 1)
+    def _finish():
+        eta = eta_ref[0, 0]
+        s = s_ref[...].astype(jnp.float32)
+        gp = gp_ref[...].astype(jnp.float32)
+        prev = s + g_ref[...] - gp   # Eqn. (3.1); mirrors tracking_update
+        cur = prev
+        for _ in range(K):
+            sent = (cur.astype(jnp.bfloat16).astype(jnp.float32)
+                    if wire_bf16 else cur)
+            # gossip contraction over the leading agent axis of the 3-D
+            # tile: (mp, mp) x (mp, bd, kp) -> (mp, bd, kp)
+            mixed = jax.lax.dot_general(
+                l_ref[...], sent, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            prev, cur = cur, (1.0 + eta) * mixed - eta * prev
+        snew_ref[...] = cur
+
+
+def apply_track_fused(A: jax.Array, W: jax.Array, S: jax.Array,
+                      G_prev: jax.Array, L: jax.Array, eta, K: int, *,
+                      block_d: Optional[int] = None,
+                      block_e: Optional[int] = None,
+                      interpret: bool = False,
+                      wire_bf16: bool = False):
+    """Fused local apply + subspace tracking + K FastMix rounds, one launch.
+
+    Semantically::
+
+        G = einsum('mde,mek->mdk', A, W)        # local power step
+        S_new = fastmix_track_fused(S, G, G_prev, L, eta, K)
+        return S_new, G
+
+    but ``G`` is produced tile-by-tile in VMEM and consumed by the combine
+    + rounds in place — it is written to HBM exactly once (as the next
+    iteration's ``G_prev``) instead of written-then-reread between two
+    launches.  Dense ``(m, d, d)`` operators only; the engine composes the
+    unfused (bit-equal) path for Gram-form data operators and off-TPU
+    hosts (:meth:`repro.core.consensus.ConsensusEngine.apply_mix_track`).
+
+    Tile sizes: ``block_d`` (output rows) and ``block_e`` (contraction)
+    resolve through the autotune cache (kernel name ``apply_track``).  The
+    agent axis is padded to 8, not 128: the 3-D tiles carry it as a batch
+    dim, so VMEM per step is ``mp*(bd*be + be*kp + 4*bd*kp)`` fp32 words —
+    with the (64, 256) defaults and kp=128 that is ~4.5 MiB at m=16,
+    leaving headroom for double buffering.  The gossip matmul underfeeds
+    the MXU at small m; the apply contraction dominates the flops, which is
+    what the tiling optimises.
+
+    Returns:
+      ``(S_new, G)`` — both ``(m, d, k)`` fp32.
+    """
+    m, d, k = W.shape
+    assert A.shape == (m, d, d), (A.shape, W.shape)
+    assert S.shape == G_prev.shape == (m, d, k), (S.shape, G_prev.shape)
+    assert L.shape == (m, m), (L.shape,)
+    if block_d is None:
+        block_d = autotune.resolve("apply_track", "block_d", (m, d, k),
+                                   W.dtype, default=64)
+    if block_e is None:
+        block_e = autotune.resolve("apply_track", "block_e", (m, d, k),
+                                   W.dtype, default=256)
+    return _apply_track_fused(A, W, S, G_prev, L, eta, K,
+                              block_d=int(block_d), block_e=int(block_e),
+                              interpret=interpret, wire_bf16=wire_bf16)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "block_d", "block_e",
+                                             "interpret", "wire_bf16"))
+def _apply_track_fused(A, W, S, G_prev, L, eta, K: int, *, block_d: int,
+                       block_e: int, interpret: bool, wire_bf16: bool):
+    m, d, k = W.shape
+    f32 = jnp.float32
+    if K <= 0:
+        G = jnp.einsum("mde,mek->mdk", A.astype(f32), W.astype(f32),
+                       precision=jax.lax.Precision.HIGHEST)
+        return tracking_update(S.astype(f32), G, G_prev.astype(f32)), G
+
+    mp = _round_up(m, 8)
+    kp = _round_up(k, 8 if interpret else 128)
+    bd = _round_up(min(block_d, d), 8)
+    be = _round_up(min(block_e, d), 8 if interpret else 128)
+    dr = _round_up(d, bd)          # padded row axis
+    dc = _round_up(d, be)          # padded contraction axis
+
+    a_p = jnp.pad(A.astype(f32), ((0, mp - m), (0, dr - d), (0, dc - d)))
+    w_p = jnp.pad(W.astype(f32), ((0, mp - m), (0, dc - d), (0, kp - k)))
+    s_p = jnp.pad(S.astype(f32), ((0, mp - m), (0, dr - d), (0, kp - k)))
+    gp_p = jnp.pad(G_prev.astype(f32),
+                   ((0, mp - m), (0, dr - d), (0, kp - k)))
+    l_p = jnp.pad(L.astype(f32), ((0, mp - m), (0, mp - m)))
+    eta_p = jnp.asarray(eta, f32).reshape(1, 1)
+    n_s = dc // be
+    vtile = pl.BlockSpec((mp, bd, kp), lambda i, s: (0, i, 0))
+
+    S_new, G = pl.pallas_call(
+        functools.partial(_apply_track_kernel, K=int(K), n_s=n_s,
+                          wire_bf16=wire_bf16),
+        grid=(dr // bd, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, s: (0, 0),
+                         memory_space=pltpu.SMEM),          # eta
+            pl.BlockSpec((mp, mp), lambda i, s: (0, 0)),    # L: resident
+            pl.BlockSpec((mp, bd, be), lambda i, s: (0, i, s)),   # A tile
+            pl.BlockSpec((mp, be, kp), lambda i, s: (0, s, 0)),   # W panel
+            vtile,                                          # S tile
+            vtile,                                          # G_prev tile
+        ],
+        out_specs=(vtile, vtile),
+        out_shape=(jax.ShapeDtypeStruct((mp, dr, kp), f32),
+                   jax.ShapeDtypeStruct((mp, dr, kp), f32)),
+        interpret=interpret,
+    )(eta_p, l_p, a_p, w_p, s_p, gp_p)
+    return S_new[:m, :d, :k], G[:m, :d, :k]

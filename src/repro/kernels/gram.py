@@ -12,10 +12,13 @@ semantics), and is written back to HBM exactly once.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from . import autotune
 
 
 def _gram_kernel(xi_ref, xj_ref, o_ref):
@@ -30,10 +33,15 @@ def _gram_kernel(xi_ref, xj_ref, o_ref):
         preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "interpret"))
-def gram(x: jax.Array, *, block_d: int = 128, block_n: int = 512,
+def gram(x: jax.Array, *, block_d: Optional[int] = None,
+         block_n: Optional[int] = None,
          interpret: bool = False) -> jax.Array:
     """``x`` (n, d) -> ``x.T @ x`` (d, d) in fp32.
+
+    ``block_* = None`` resolves through the persistent autotune cache
+    (kernel name ``gram``, keyed on device kind / padded shape bucket /
+    dtype — see :mod:`repro.kernels.autotune`) before falling back to the
+    built-in (128, 512) tiling.
 
     Shapes are padded up to block multiples; zero padding is exact for a Gram
     matrix (zero rows contribute nothing).  VMEM working set per step is
@@ -41,6 +49,19 @@ def gram(x: jax.Array, *, block_d: int = 128, block_n: int = 512,
     128^2*4 = 0.6 MiB, far under the ~16 MiB v5e VMEM budget, leaving room
     for double buffering of the streamed panels).
     """
+    if block_d is None:
+        block_d = autotune.resolve("gram", "block_d", x.shape, x.dtype,
+                                   default=128)
+    if block_n is None:
+        block_n = autotune.resolve("gram", "block_n", x.shape, x.dtype,
+                                   default=512)
+    return _gram(x, block_d=int(block_d), block_n=int(block_n),
+                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "interpret"))
+def _gram(x: jax.Array, *, block_d: int, block_n: int,
+          interpret: bool) -> jax.Array:
     n, d = x.shape
     dp = -(-d // block_d) * block_d
     np_ = -(-n // block_n) * block_n

@@ -23,15 +23,21 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def gram(x: jax.Array, *, block_d: int = 128, block_n: int = 512,
+def gram(x: jax.Array, *, block_d: Optional[int] = None,
+         block_n: Optional[int] = None,
          interpret: Optional[bool] = None) -> jax.Array:
-    """Local covariance ``X^T X`` (paper Eqn. 5.1) via the Pallas kernel."""
+    """Local covariance ``X^T X`` (paper Eqn. 5.1) via the Pallas kernel.
+
+    ``block_* = None`` consults the persistent autotune cache
+    (:mod:`repro.kernels.autotune`) before the built-in tiling.
+    """
     it = _default_interpret() if interpret is None else interpret
     return _gram.gram(x, block_d=block_d, block_n=block_n, interpret=it)
 
 
-def power_matmul(a: jax.Array, w: jax.Array, *, block_m: int = 512,
-                 block_k: int = 512,
+def power_matmul(a: jax.Array, w: jax.Array, *,
+                 block_m: Optional[int] = None,
+                 block_k: Optional[int] = None,
                  interpret: Optional[bool] = None) -> jax.Array:
     """Power-iteration step ``A @ W`` via the Pallas kernel."""
     it = _default_interpret() if interpret is None else interpret
@@ -40,12 +46,34 @@ def power_matmul(a: jax.Array, w: jax.Array, *, block_m: int = 512,
 
 
 def fastmix_fused(S: jax.Array, L: jax.Array, eta: float, K: int, *,
-                  block_n: int = 512,
-                  interpret: Optional[bool] = None) -> jax.Array:
+                  block_n: Optional[int] = None,
+                  interpret: Optional[bool] = None,
+                  wire_bf16: bool = False) -> jax.Array:
     """All-K-rounds fused FastMix (Alg. 3) via the Pallas kernel."""
     it = _default_interpret() if interpret is None else interpret
     return _fm.fastmix_fused(S, L, float(eta), K, block_n=block_n,
-                             interpret=it)
+                             interpret=it, wire_bf16=wire_bf16)
+
+
+def apply_track_fused(A: jax.Array, W: jax.Array, S: jax.Array,
+                      G_prev: jax.Array, L: jax.Array, eta: float, K: int,
+                      *, block_d: Optional[int] = None,
+                      block_e: Optional[int] = None,
+                      interpret: Optional[bool] = None,
+                      wire_bf16: bool = False):
+    """Fused local apply + tracking + K FastMix rounds -> ``(S_new, G)``."""
+    it = _default_interpret() if interpret is None else interpret
+    return _fm.apply_track_fused(A, W, S, G_prev, L, float(eta), K,
+                                 block_d=block_d, block_e=block_e,
+                                 interpret=it, wire_bf16=wire_bf16)
+
+
+def cholqr2(X: jax.Array, *, block_n: Optional[int] = None,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Batched CholeskyQR2 orthonormalization (Eqn. 3.3 fast path)."""
+    from . import cholqr as _cq
+    it = _default_interpret() if interpret is None else interpret
+    return _cq.cholqr2(X, block_n=block_n, interpret=it)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

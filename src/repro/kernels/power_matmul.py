@@ -14,10 +14,13 @@ is to stream A at full HBM bandwidth, which block (512, 512) tiles achieve.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from . import autotune
 
 
 def _power_kernel(a_ref, w_ref, o_ref):
@@ -30,11 +33,31 @@ def _power_kernel(a_ref, w_ref, o_ref):
         preferred_element_type=jnp.float32)
 
 
+def power_matmul(a: jax.Array, w: jax.Array, *,
+                 block_m: Optional[int] = None,
+                 block_k: Optional[int] = None,
+                 interpret: bool = False) -> jax.Array:
+    """(d, d) @ (d, k) -> (d, k), fp32 accumulation, k padded to 128.
+
+    ``block_* = None`` resolves through the persistent autotune cache
+    (kernel name ``power_matmul``) before the built-in (512, 512) tiling.
+    """
+    if block_m is None:
+        block_m = autotune.resolve("power_matmul", "block_m",
+                                   (a.shape[0], w.shape[1]), a.dtype,
+                                   default=512)
+    if block_k is None:
+        block_k = autotune.resolve("power_matmul", "block_k",
+                                   (a.shape[0], w.shape[1]), a.dtype,
+                                   default=512)
+    return _power_matmul(a, w, block_m=int(block_m), block_k=int(block_k),
+                         interpret=interpret)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_m", "block_k", "interpret"))
-def power_matmul(a: jax.Array, w: jax.Array, *, block_m: int = 512,
-                 block_k: int = 512, interpret: bool = False) -> jax.Array:
-    """(d, d) @ (d, k) -> (d, k), fp32 accumulation, k padded to 128."""
+def _power_matmul(a: jax.Array, w: jax.Array, *, block_m: int,
+                  block_k: int, interpret: bool) -> jax.Array:
     d, d2 = a.shape
     dk, k = w.shape
     assert d == d2 == dk, (a.shape, w.shape)

@@ -87,8 +87,13 @@ def serve_pca(args) -> None:
     problems, W0 = synthetic_problem_batch(
         B, m, d, k, n_per_agent=args.n_per_agent, seed=args.seed)
 
+    wire = "bf16" if args.wire_bf16 else None
     engine = ConsensusEngine.for_algorithm("deepca", topo, K=args.rounds,
-                                           backend="stacked")
+                                           backend="stacked",
+                                           wire_dtype=wire)
+    if wire:
+        print("[serve] gossip wire precision: bf16 "
+              "(fp32 tracking/QR accumulation)")
     driver = IterationDriver(step=PowerStep.for_algorithm(
         "deepca", args.rounds), engine=engine)
 
@@ -100,10 +105,11 @@ def serve_pca(args) -> None:
         jax.block_until_ready(out.W)
     dt = (time.perf_counter() - t0) / args.reps
 
+    from repro.core.step import qr_orth   # shared CholeskyQR2 fast path
     tans = []
     for b, ops in enumerate(problems):
         U, _ = top_k_eigvecs(ops.mean_matrix(), k)
-        Wbar = jnp.linalg.qr(jnp.mean(out.W[b], axis=0))[0]
+        Wbar = qr_orth(jnp.mean(out.W[b], axis=0))
         tans.append(float(metrics.tan_theta_k(U, Wbar)))
     print(f"served {B} PCA problems (m={m}, d={d}, k={k}, "
           f"T={args.iters}, K={args.rounds}) in {dt * 1e3:.1f} ms/launch "
@@ -161,7 +167,8 @@ def serve_pca_stream(args) -> None:
         if resp is None:                 # must survive python -O
             raise RuntimeError(f"request {rid} was never served")
         U, _ = top_k_eigvecs(ops.mean_matrix(), resp.W.shape[-1])
-        Wbar = jnp.linalg.qr(jnp.mean(resp.W, axis=0))[0]
+        from repro.core.step import qr_orth
+        Wbar = qr_orth(jnp.mean(resp.W, axis=0))
         tans.append(float(metrics.tan_theta_k(U, Wbar)))
     s = svc.stats
     print(f"[queue] served {s['served']} ragged requests in {dt:.2f}s "
@@ -189,6 +196,9 @@ def main() -> None:
     ap.add_argument("--n-per-agent", type=int, default=64)
     ap.add_argument("--iters", type=int, default=30, help="power iterations")
     ap.add_argument("--rounds", type=int, default=6, help="FastMix rounds K")
+    ap.add_argument("--wire-bf16", action="store_true",
+                    help="gossip iterates travel in bf16 (tracking/QR stay "
+                         "fp32); see README 'Performance'")
     ap.add_argument("--reps", type=int, default=10, help="timed launches")
     # --workload pca-stream knobs
     ap.add_argument("--ticks", type=int, default=8, help="stream ticks")

@@ -179,8 +179,8 @@ class PCAService:
         rng = np.random.default_rng((self._seed, d, extra))
         G = jnp.asarray(rng.standard_normal((d, extra)), W0.dtype)
         G = G - W0 @ (W0.T @ G)
-        q, _ = jnp.linalg.qr(G)
-        return q
+        from repro.core.step import qr_orth   # shared CholeskyQR2 fast path
+        return qr_orth(G)
 
     # ------------------------------------------------------------- intake
     def submit(self, ops: StackedOperators, W0: jax.Array) -> int:

@@ -195,8 +195,14 @@ class StreamingDeEPCA:
             return float(trace.mean_tan_theta[-1])
         if self._Q_prev is None:
             return 0.0
-        Wbar = jnp.linalg.qr(jnp.mean(self._carry[1], axis=0))[0]
-        return float(metrics.tan_theta_k(self._Q_prev, Wbar))
+        return float(metrics.tan_theta_k(self._Q_prev, self._mean_basis()))
+
+    def _mean_basis(self) -> jax.Array:
+        """Orthonormal basis of the mean estimate — via the shared
+        ``qr_orth`` compute site, so streaming inherits the CholeskyQR2
+        fast path (PR 5) like every driver substrate."""
+        from repro.core.step import qr_orth
+        return qr_orth(jnp.mean(self._carry[1], axis=0))
 
     def _restart(self, ops: StackedOperators):
         """Rebase tracker state on the current operators.
@@ -274,7 +280,7 @@ class StreamingDeEPCA:
             if ewma_val is not None:
                 self._ewma = ewma_val if self._ewma is None else \
                     (1.0 - pol.alpha) * self._ewma + pol.alpha * ewma_val
-        self._Q_prev = jnp.linalg.qr(jnp.mean(self._carry[1], axis=0))[0]
+        self._Q_prev = self._mean_basis()
         report = TickReport(
             tick=self._ticks, iterations=self._iters - iters_before,
             comm_rounds=self._rounds - rounds_before,

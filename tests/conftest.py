@@ -16,8 +16,22 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
 import sys
+import tempfile
 import types
+
+# ---------------------------------------------------------------------------
+# Hermetic autotune cache: kernels (and `qr_orth`'s impl pin) consult the
+# persistent cache at ~/.cache/repro/autotune.json via REPRO_AUTOTUNE_CACHE.
+# A developer who ran the README's `--record` sweeps would otherwise leak
+# machine-global tuning state (e.g. a per-bucket `householder` pin) into the
+# suite and silently change test numerics.  Point the whole session at a
+# throwaway path unless the caller explicitly pinned one; individual tests
+# (tests/test_autotune.py) still override per-test via monkeypatch.
+if "REPRO_AUTOTUNE_CACHE" not in os.environ:
+    os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+        tempfile.mkdtemp(prefix="repro-test-autotune-"), "autotune.json")
 
 try:
     import hypothesis  # noqa: F401  (real library present: nothing to do)

@@ -35,8 +35,14 @@ def _setup(m=8, d=16, k=2, seed=0):
 
 
 def _qr(S):
-    q, _ = jnp.linalg.qr(S)
-    return q
+    # The legacy bodies below are frozen *wiring* (tracking arithmetic, mix
+    # placement, sign adjust, resume/round accounting); orthonormalization
+    # itself is a shared compute site that PR 5 swapped to CholeskyQR2
+    # repo-wide, so the bit-parity contract is "legacy wiring + the shared
+    # qr_orth" — using the site keeps these tests pinning exactly the
+    # driver refactor, not the (intentionally changed) QR implementation.
+    from repro.core.step import qr_orth
+    return qr_orth(S)
 
 
 # ------------------------------------------------- substrate 1: static scan

@@ -1,0 +1,328 @@
+"""PR-5 hot-path contracts: CholeskyQR2, apply->mix->track fusion, bf16
+wire precision.
+
+The acceptance pins:
+* ``core/step.qr_orth`` routes through CholeskyQR2 with property-tested
+  orthonormality and a parity bound vs ``jnp.linalg.qr`` — checked both on
+  raw factors (hypothesis-swept shapes) and end to end on every
+  non-subprocess driver substrate (scan / traced_scan / unrolled /
+  run_batch / run_stream);
+* ``apply_track_fused``'s poly fallback is bit-equal to the existing
+  ``local_apply`` + ``mix_track`` composition;
+* bf16 wire mode matches fp32 gossip within bf16-scale tolerances and the
+  kernel wire path matches the per-round stacked wire reference.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ConsensusEngine, DynamicConsensusEngine,
+                        IterationDriver, PowerStep, TopologySchedule, deepca,
+                        erdos_renyi, synthetic_spiked, top_k_eigvecs)
+from repro.core.operators import StackedOperators
+from repro.core.step import qr_orth, sign_adjust
+from repro.kernels import fastmix as fm
+from repro.kernels.cholqr import cholqr2
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _orth_err(Q):
+    k = Q.shape[-1]
+    return float(jnp.max(jnp.abs(
+        jnp.einsum("...dk,...dl->...kl", Q, Q) - jnp.eye(k, dtype=Q.dtype))))
+
+
+def _subspace_err(Q, Qref):
+    P = jnp.einsum("...dk,...ek->...de", Q, Q)
+    return float(jnp.max(jnp.abs(
+        P - jnp.einsum("...dk,...ek->...de", Qref, Qref))))
+
+
+# ------------------------------------------------------------- cholqr2 unit
+@given(st.integers(2, 40), st.integers(1, 8), st.integers(0, 6))
+@settings(max_examples=12, deadline=None)
+def test_cholqr2_property_orthonormal_and_matches_qr(d, k, seed):
+    if k > d:
+        d = k + d          # keep thin
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((3, d, k)), jnp.float32)
+    Q = cholqr2(X)
+    Qh = jnp.linalg.qr(X)[0]
+    assert _orth_err(Q) < 5e-6
+    assert _subspace_err(Q, Qh) < 5e-6
+    # sign-adjusted columns agree with Householder's to round-off
+    ref = X[:, :, :]                       # align both against X itself
+    np.testing.assert_allclose(np.asarray(sign_adjust(Q, ref)),
+                               np.asarray(sign_adjust(Qh, ref)),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_cholqr2_ill_conditioned_rescue():
+    """cond(X) ~ 3e6 (cond^2 overflows fp32 Grams): the screened shifted
+    pass + third pass must still deliver machine-orthonormal Q."""
+    rng = np.random.default_rng(0)
+    base = np.linalg.qr(rng.standard_normal((256, 4)))[0]
+    X = jnp.asarray((base * np.array([1.0, 1e-3, 1e-5, 3e-7]))[None],
+                    jnp.float32)
+    Q = cholqr2(X)
+    assert bool(jnp.all(jnp.isfinite(Q)))
+    assert _orth_err(Q) < 5e-6
+
+
+def test_cholqr2_rank_deficient_stays_finite():
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.standard_normal((2, 64, 2)), jnp.float32)
+    X = jnp.concatenate([X, X], axis=-1)          # exactly repeated columns
+    Q = cholqr2(X)
+    assert bool(jnp.all(jnp.isfinite(Q)))
+    # the range-space columns are still orthonormal
+    assert _orth_err(Q[..., :2]) < 5e-6
+
+
+@pytest.mark.slow
+def test_cholqr2_f64_stays_f64():
+    import subprocess, sys, os, textwrap
+    script = textwrap.dedent("""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np, jax.numpy as jnp
+        from repro.kernels.cholqr import cholqr2
+        X = jnp.asarray(np.random.default_rng(0).standard_normal((4, 300, 5)))
+        assert X.dtype == jnp.float64
+        Q = cholqr2(X)
+        assert Q.dtype == jnp.float64, Q.dtype
+        k = Q.shape[-1]
+        err = float(jnp.max(jnp.abs(
+            jnp.einsum("...dk,...dl->...kl", Q, Q) - jnp.eye(k))))
+        assert err < 1e-14, err
+        print("OK64")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK64" in out.stdout
+
+
+def test_cholqr2_gram_kernel_route():
+    """interpret=True routes the Gram through the Pallas `gram` kernel."""
+    rng = np.random.default_rng(2)
+    X = jnp.asarray(rng.standard_normal((2, 40, 6)), jnp.float32)
+    Qk = cholqr2(X, interpret=True)
+    assert _orth_err(Qk) < 5e-6
+    assert _subspace_err(Qk, cholqr2(X)) < 5e-6
+
+
+def test_qr_orth_env_escape_hatch(monkeypatch):
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.standard_normal((4, 24, 3)), jnp.float32)
+    monkeypatch.setenv("REPRO_QR_IMPL", "householder")
+    np.testing.assert_array_equal(np.asarray(qr_orth(X)),
+                                  np.asarray(jnp.linalg.qr(X)[0]))
+    monkeypatch.delenv("REPRO_QR_IMPL")
+    np.testing.assert_array_equal(np.asarray(qr_orth(X)),
+                                  np.asarray(cholqr2(X)))
+
+
+# ------------------------------------- qr parity on every driver substrate
+def _problem(m=8, d=20, k=3, seed=0):
+    ops = synthetic_spiked(m, d, k, n_per_agent=24, seed=seed)
+    U, _ = top_k_eigvecs(ops.mean_matrix(), k)
+    rng = np.random.default_rng(seed + 3)
+    W0 = jnp.asarray(np.linalg.qr(rng.standard_normal((d, k)))[0],
+                     jnp.float32)
+    return ops, U, W0
+
+
+def _run_substrate(substrate, ops, W0, T=10, K=5):
+    """One driver window under the named substrate; returns final W."""
+    m = ops.m
+    topo = erdos_renyi(m, p=0.6, seed=2)
+    if substrate in ("scan", "run_batch", "run_stream"):
+        drv = IterationDriver(
+            step=PowerStep.for_algorithm("deepca", K),
+            engine=ConsensusEngine.for_algorithm("deepca", topo, K=K,
+                                                 backend="stacked"))
+        if substrate == "scan":
+            return drv.run(ops, W0, T=T).carry[1]
+        if substrate == "run_batch":
+            return drv.run_batch([ops, ops], jnp.stack([W0, W0]), T=T).W[0]
+        runs = list(drv.run_stream([ops, ops], W0, T=T // 2))
+        return runs[-1].carry[1]
+    sched = TopologySchedule.periodic_rewiring(m, p=0.6, seed=0, period=2)
+    dyn = DynamicConsensusEngine.for_algorithm(
+        "deepca" if substrate == "traced_scan" else "depca", sched, K=K,
+        backend="stacked")
+    drv = IterationDriver(
+        step=PowerStep.for_algorithm(
+            "deepca" if substrate == "traced_scan" else "depca", K),
+        dynamic=dyn)
+    return drv.run(ops, W0, T=T, substrate=(
+        "traced_scan" if substrate == "traced_scan" else "unrolled")).carry[1]
+
+
+@pytest.mark.parametrize("substrate", ["scan", "traced_scan", "unrolled",
+                                       "run_batch", "run_stream"])
+def test_qr_parity_bound_on_substrate(substrate, monkeypatch):
+    """Same substrate, cholqr2 (default) vs pinned Householder: per-agent
+    estimates span the same subspace within an fp32 parity bound, and the
+    cholqr2 iterates are orthonormal."""
+    ops, U, W0 = _problem()
+    W_chol = _run_substrate(substrate, ops, W0)
+    monkeypatch.setenv("REPRO_QR_IMPL", "householder")
+    W_house = _run_substrate(substrate, ops, W0)
+    monkeypatch.delenv("REPRO_QR_IMPL")
+    assert _orth_err(W_chol) < 5e-6
+    assert _subspace_err(W_chol, W_house) < 5e-4
+    # sign_adjust (Alg. 2) pins the column-sign ambiguity, so even raw
+    # entries agree to accumulated fp32 round-off
+    np.testing.assert_allclose(np.asarray(W_chol), np.asarray(W_house),
+                               rtol=5e-3, atol=5e-4)
+
+
+# ------------------------------------------------- apply->mix->track fusion
+@pytest.mark.skipif(jax.default_backend() == "tpu",
+                    reason="on TPU backend='pallas' fires the real kernel; "
+                           "the poly fallback under pin cannot run")
+def test_apply_mix_track_poly_fallback_bit_equal():
+    """Acceptance pin: on the off-TPU pallas backend the engine's fused
+    entry point IS the local_apply + mix_track composition, bit for bit."""
+    rng = np.random.default_rng(0)
+    m, d, k, K = 8, 32, 3, 5
+    A = rng.standard_normal((m, d, d)).astype(np.float32)
+    ops = StackedOperators(dense=jnp.asarray((A + A.transpose(0, 2, 1)) / 2))
+    topo = erdos_renyi(m, p=0.5, seed=1)
+    S, W, Gp = (jnp.asarray(rng.standard_normal((m, d, k)), jnp.float32)
+                for _ in range(3))
+    for backend in ("pallas", "stacked"):
+        eng = ConsensusEngine(topo, K=K, backend=backend)
+        S_f, G_f = eng.apply_mix_track(S, W, Gp, ops)
+        G_c = ops.apply(W)
+        S_c = eng.mix_track(S, G_c, Gp)
+        np.testing.assert_array_equal(np.asarray(S_f), np.asarray(S_c))
+        np.testing.assert_array_equal(np.asarray(G_f), np.asarray(G_c))
+    # data-form (Gram) operators always compose — and bit-equally so
+    ops_data = StackedOperators(
+        data=jnp.asarray(rng.standard_normal((m, 24, d)), jnp.float32))
+    eng = ConsensusEngine(topo, K=K, backend="pallas")
+    S_f, G_f = eng.apply_mix_track(S, W, Gp, ops_data)
+    G_c = ops_data.apply(W)
+    np.testing.assert_array_equal(np.asarray(G_f), np.asarray(G_c))
+    np.testing.assert_array_equal(np.asarray(S_f),
+                                  np.asarray(eng.mix_track(S, G_c, Gp)))
+
+
+def test_apply_track_fused_kernel_matches_composition():
+    """Interpret-mode kernel vs the unfused composition, fp32 tolerance;
+    both outputs (S_new and G) must agree."""
+    rng = np.random.default_rng(1)
+    m, d, k, K = 8, 40, 3, 4
+    A = rng.standard_normal((m, d, d)).astype(np.float32)
+    A = jnp.asarray((A + A.transpose(0, 2, 1)) / 2)
+    topo = erdos_renyi(m, p=0.5, seed=2)
+    L = jnp.asarray(topo.mixing, jnp.float32)
+    S, W, Gp = (jnp.asarray(rng.standard_normal((m, d, k)), jnp.float32)
+                for _ in range(3))
+    eta = 0.3
+    G_ref = jnp.einsum("mde,mek->mdk", A, W,
+                       precision=jax.lax.Precision.HIGHEST)
+    S_ref = fm.fastmix_track_poly(S, G_ref, Gp, L, eta, K)
+    S_k, G_k = fm.apply_track_fused(A, W, S, Gp, L, eta, K, block_d=16,
+                                    block_e=16, interpret=True)
+    scale = float(jnp.max(jnp.abs(S_ref))) + 1.0
+    np.testing.assert_allclose(np.asarray(G_k), np.asarray(G_ref),
+                               rtol=2e-5, atol=2e-5 * scale)
+    np.testing.assert_allclose(np.asarray(S_k), np.asarray(S_ref),
+                               rtol=2e-5, atol=2e-5 * scale)
+    # K=0 degenerates to the bare tracked combine + apply
+    S0, G0 = fm.apply_track_fused(A, W, S, Gp, L, eta, 0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(S0),
+                                  np.asarray(fm.tracking_update(S, G0, Gp)))
+
+
+def test_engine_kernel_apply_mix_track_end_to_end():
+    """deepca via engines whose apply_mix_track fires the interpret-mode
+    kernel == stacked reference within fp32 tolerance."""
+    ops, U, W0 = _problem(m=8, d=16, k=2, seed=1)
+    dense = StackedOperators(dense=jnp.einsum(
+        "mnd,mne->mde", ops.data, ops.data,
+        precision=jax.lax.Precision.HIGHEST))
+    topo = erdos_renyi(8, p=0.6, seed=2)
+    r_ref = deepca(dense, topo, W0, k=2, T=12, K=5, U=U, backend="stacked")
+    eng = ConsensusEngine.for_algorithm("deepca", topo, K=5,
+                                        backend="pallas", interpret=True)
+    r_kern = deepca(dense, topo, W0, k=2, T=12, K=5, U=U, engine=eng)
+    np.testing.assert_allclose(np.asarray(r_kern.W), np.asarray(r_ref.W),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------- bf16 wire precision
+def test_wire_mode_matches_stacked_wire_reference():
+    """Kernel wire path == per-round stacked wire loop (both quantize the
+    sent iterate through the same compute site)."""
+    from repro.core.mixing import fastmix_wire
+    rng = np.random.default_rng(0)
+    topo = erdos_renyi(8, p=0.5, seed=1)
+    L = jnp.asarray(topo.mixing, jnp.float32)
+    S = jnp.asarray(rng.standard_normal((8, 40, 4)), jnp.float32)
+    eta, K = 0.3, 6
+    ref = fastmix_wire(S, L, eta, K)
+    kern = fm.fastmix_fused(S, L, eta, K, block_n=128, interpret=True,
+                            wire_bf16=True)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # engines: stacked wire == pallas(poly/interp) wire within fp32 tol
+    e_st = ConsensusEngine(topo, K=K, backend="stacked", wire_dtype="bf16")
+    e_ik = ConsensusEngine(topo, K=K, backend="pallas", interpret=True,
+                           wire_dtype="bf16")
+    e_py = ConsensusEngine(topo, K=K, backend="pallas", wire_dtype="bf16")
+    ref_mix = e_st.mix(S)
+    for eng in (e_ik, e_py):
+        np.testing.assert_allclose(np.asarray(eng.mix(S)),
+                                   np.asarray(ref_mix), rtol=2e-5,
+                                   atol=2e-5)
+
+
+def test_wire_mode_parity_vs_fp32_envelope():
+    """bf16 wire gossip tracks fp32 gossip within a bf16-scale envelope,
+    and the mean over agents is still exactly preserved in expectation
+    terms (doubly-stochastic L applied to the quantized iterate)."""
+    rng = np.random.default_rng(1)
+    topo = erdos_renyi(10, p=0.5, seed=3)
+    S = jnp.asarray(rng.standard_normal((10, 24, 3)), jnp.float32)
+    full = ConsensusEngine(topo, K=6, backend="stacked").mix(S)
+    wire = ConsensusEngine(topo, K=6, backend="stacked",
+                           wire_dtype="bf16").mix(S)
+    scale = float(jnp.max(jnp.abs(full)))
+    assert float(jnp.max(jnp.abs(wire - full))) < 4e-2 * scale
+
+
+def test_wire_mode_deepca_converges_to_bf16_floor():
+    ops, U, W0 = _problem(m=8, d=16, k=2, seed=0)
+    topo = erdos_renyi(8, p=0.6, seed=2)
+    eng = ConsensusEngine.for_algorithm("deepca", topo, K=6,
+                                        backend="stacked",
+                                        wire_dtype="bf16")
+    res = deepca(ops, topo, W0, k=2, T=25, K=6, U=U, engine=eng)
+    # full-precision DeEPCA reaches ~1e-5 here; a bf16 wire floors around
+    # bf16 round-off amplified by the spectrum — well under 5e-2
+    assert float(res.trace.mean_tan_theta[-1]) < 5e-2
+    # iterates stayed fp32 end to end
+    assert res.W.dtype == jnp.float32
+
+
+def test_wire_mode_validation():
+    topo = erdos_renyi(4, p=0.9, seed=0)
+    with pytest.raises(ValueError, match="wire_dtype"):
+        ConsensusEngine(topo, K=2, wire_dtype="fp8")
+    with pytest.raises(ValueError, match="shard_map"):
+        ConsensusEngine(topo, K=2, backend="shard_map", wire_dtype="bf16")
+    with pytest.raises(ValueError, match="shard_map"):
+        DynamicConsensusEngine(
+            schedule=TopologySchedule.constant(topo), K=2,
+            backend="shard_map", wire_dtype="bf16")

@@ -474,13 +474,16 @@ def test_prefetch_close_wakes_parked_consumer():
 
 # ------------------------------------------------------------ block_n knob
 def test_block_n_env_override(monkeypatch):
-    from repro.kernels.fastmix import default_block_n
+    from repro.kernels.fastmix import DEFAULT_BLOCK_N, default_block_n
 
     topo = erdos_renyi(6, p=0.6, seed=0)
-    assert ConsensusEngine(topo, K=3).block_n == default_block_n()
+    # PR 5: engines no longer resolve block_n at construction — None defers
+    # to the kernels, which resolve env > autotune cache > default at trace
+    # time (so a tuned cache reaches engines built before it existed).
+    assert ConsensusEngine(topo, K=3).block_n is None
+    assert default_block_n() == DEFAULT_BLOCK_N
     monkeypatch.setenv("REPRO_FASTMIX_BLOCK_N", "256")
-    assert default_block_n() == 256
-    assert ConsensusEngine(topo, K=3).block_n == 256
+    assert default_block_n() == 256            # env wins over cache/default
     assert ConsensusEngine(topo, K=3, block_n=64).block_n == 64
     monkeypatch.setenv("REPRO_FASTMIX_BLOCK_N", "nope")
     with pytest.raises(ValueError, match="positive integer"):
