@@ -1,0 +1,32 @@
+"""Static-analysis subsystem: machine-checked contracts for the repro.
+
+Four pass families, one CLI (``python -m repro.analysis``), all reading
+their ground truth from :mod:`.registry`:
+
+* :mod:`.lint` — AST passes over ``src/``: the single-compute-site
+  registry (Eqn. 3.1 tracking, Eqn. 3.3 QR, bf16 wire rounding, the
+  tracker rebase), the bare-assert ban in library validation paths (the
+  ``python -O`` bug class), and the host-sync lint for ``.item()``-style
+  forced device syncs inside jitted code.
+* :mod:`.tracecheck` — jaxpr audits of the public entry points: f64
+  inputs must never narrow through an f32-producing equation, and every
+  bf16 wire path must accumulate in fp32+.
+* :mod:`.retrace` — compile-count harness pinning the no-retrace
+  contracts (same-m graph swaps, warm ``run_batch`` buckets, streaming
+  ticks) to a zero-compile steady state.
+* :mod:`.budget` — static VMEM-footprint models for every Pallas kernel,
+  swept over representative shapes and the persistent autotune cache.
+* :mod:`.deadcode` — import-graph reachability report with a reviewed
+  quarantine list.
+
+The pass modules import jax lazily (inside functions), so the AST-only
+passes run anywhere — including environments without an accelerator
+stack.
+"""
+from __future__ import annotations
+
+from . import budget, deadcode, lint, registry, report, retrace, tracecheck
+from .report import PassResult, Violation
+
+__all__ = ["budget", "deadcode", "lint", "registry", "report", "retrace",
+           "tracecheck", "PassResult", "Violation"]

@@ -1,0 +1,63 @@
+"""``python -m repro.analysis`` — run the static-analysis passes.
+
+Flags select passes (``--lint``, ``--tracecheck``, ``--retrace``,
+``--budget``, ``--deadcode``); no flags (or ``--all``) runs everything.
+``--json`` emits machine-readable results.  Exit status 1 when any pass
+reports a violation — this is the CI ``static-analysis`` job's gate.
+
+The jax-tracing passes (tracecheck/retrace) run on any backend; CI runs
+them on 8 fake CPU host devices (see .github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import budget, deadcode, lint, retrace, tracecheck
+
+PASSES = (
+    ("lint", lint.run, "AST contract linter over src/"),
+    ("tracecheck", tracecheck.run, "jaxpr dtype-flow audits"),
+    ("retrace", retrace.run, "no-retrace compile-count contracts"),
+    ("budget", budget.run, "Pallas kernel VMEM budgets"),
+    ("deadcode", deadcode.run, "import-graph reachability"),
+)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static-analysis passes (contract linter, jaxpr "
+                    "auditor, retrace harness, VMEM budgets, deadcode)")
+    parser.add_argument("--all", action="store_true",
+                        help="run every pass (default when no flag given)")
+    for name, _, help_ in PASSES:
+        parser.add_argument(f"--{name}", action="store_true", help=help_)
+    parser.add_argument("--json", action="store_true",
+                        help="emit machine-readable JSON")
+    parser.add_argument("-v", "--verbose", action="store_true",
+                        help="also print skipped units and notes")
+    args = parser.parse_args(argv)
+
+    selected = [(name, fn) for name, fn, _ in PASSES
+                if getattr(args, name)]
+    if args.all or not selected:
+        selected = [(name, fn) for name, fn, _ in PASSES]
+
+    results = []
+    for name, fn in selected:
+        results.append(fn())
+
+    if args.json:
+        print(json.dumps({"ok": all(r.ok for r in results),
+                          "passes": [r.to_dict() for r in results]},
+                         indent=2))
+    else:
+        for r in results:
+            print(r.render(verbose=args.verbose))
+    return 0 if all(r.ok for r in results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

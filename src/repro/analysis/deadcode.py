@@ -1,0 +1,213 @@
+"""Import-graph reachability over ``src/repro`` — the deadcode report.
+
+Builds the static import graph (AST: ``import``/``from-import``, both
+module-level *and* lazy function-local imports — the repo uses lazy
+imports deliberately to keep jax out of pure-data modules) and classifies
+every module by reachability:
+
+* **runtime** — reachable from :data:`repro.analysis.registry.ENTRY_POINTS`
+  (the paper-facing surface + serving front ends + this package);
+* **aux** — unreachable from entry points but imported by ``tests/``,
+  ``benchmarks/`` or ``examples/``: library code that only test scaffolds
+  keep alive.  Must be explicitly quarantined in
+  :data:`registry.DEADCODE_QUARANTINE` or it FAILS the build — the list
+  is the reviewed decision record, not a guess;
+* **orphan** — reachable from nothing at all: FAILS (delete it or wire
+  it up);
+* **stale-quarantine** — quarantined but actually runtime-reachable:
+  FAILS (remove the entry; the list must not rot).
+
+A quarantine entry covers the module and everything *only* it reaches.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Set, Tuple
+
+from . import registry
+from .report import PassResult
+
+_PKG = "repro"
+
+
+def _iter_modules(src_root: str) -> Dict[str, str]:
+    """dotted module name -> absolute path, for every module in the pkg."""
+    out = {}
+    pkg_root = os.path.join(src_root, _PKG)
+    for dirpath, dirnames, filenames in os.walk(pkg_root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fname in filenames:
+            if not fname.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fname)
+            rel = os.path.relpath(full, src_root)
+            parts = rel[:-3].split(os.sep)
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            out[".".join(parts)] = full
+    return out
+
+
+def _imports_of(path: str, module: str,
+                known: Set[str]) -> Set[str]:
+    """Repo-internal modules ``module`` imports (eager or lazy)."""
+    with open(path, "r", encoding="utf-8") as f:
+        try:
+            tree = ast.parse(f.read(), filename=path)
+        except SyntaxError:
+            return set()
+    is_pkg = path.endswith("__init__.py")
+    pkg_parts = module.split(".") if is_pkg else module.split(".")[:-1]
+    found: Set[str] = set()
+
+    def _add(dotted: str, names: Iterable[str] = ()) -> None:
+        if not (dotted == _PKG or dotted.startswith(_PKG + ".")):
+            return
+        if dotted in known:
+            found.add(dotted)
+        # `from pkg import name` where name is itself a module
+        for n in names:
+            child = f"{dotted}.{n}"
+            if child in known:
+                found.add(child)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                _add(alias.name)
+        elif isinstance(node, ast.Call):
+            # the dynamic-registry idiom:
+            # importlib.import_module(f"repro.configs.{name}") — the
+            # literal prefix marks every matching module reachable
+            fn = node.func
+            is_imp = ((isinstance(fn, ast.Attribute)
+                       and fn.attr == "import_module")
+                      or (isinstance(fn, ast.Name)
+                          and fn.id == "import_module"))
+            if is_imp and node.args:
+                arg = node.args[0]
+                prefix = None
+                if isinstance(arg, ast.JoinedStr) and arg.values and \
+                        isinstance(arg.values[0], ast.Constant):
+                    prefix = str(arg.values[0].value)
+                elif isinstance(arg, ast.Constant):
+                    prefix = str(arg.value)
+                if prefix:
+                    for m in known:
+                        if m.startswith(prefix):
+                            found.add(m)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:      # relative: resolve against this package
+                base = pkg_parts[:len(pkg_parts) - node.level + 1]
+                dotted = ".".join(base + (node.module or "").split(".")
+                                  ).rstrip(".")
+            else:
+                dotted = node.module or ""
+            _add(dotted, [a.name for a in node.names])
+    found.discard(module)
+    return found
+
+
+def _aux_roots(repo_root: str, known: Set[str]) -> Dict[str, Set[str]]:
+    """Modules imported by tests/benchmarks/examples -> importing files."""
+    out: Dict[str, Set[str]] = {}
+    for sub in ("tests", "benchmarks", "examples"):
+        base = os.path.join(repo_root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fname in filenames:
+                if not fname.endswith(".py"):
+                    continue
+                full = os.path.join(dirpath, fname)
+                rel = os.path.relpath(full, repo_root)
+                for mod in _imports_of(full, f"__aux__.{rel}", known):
+                    out.setdefault(mod, set()).add(rel)
+    return out
+
+
+def _closure(roots: Iterable[str], edges: Dict[str, Set[str]],
+             known: Set[str]) -> Set[str]:
+    seen: Set[str] = set()
+    stack = [r for r in roots if r in known]
+    while stack:
+        mod = stack.pop()
+        if mod in seen:
+            continue
+        seen.add(mod)
+        # entering a module implies importing its ancestor packages
+        parts = mod.split(".")
+        for i in range(1, len(parts)):
+            anc = ".".join(parts[:i])
+            if anc in known and anc not in seen:
+                stack.append(anc)
+        stack.extend(edges.get(mod, ()))
+    return seen
+
+
+def analyze(src_root: str = None, repo_root: str = None) -> dict:
+    """Full reachability report (the CLI renders / json-dumps this)."""
+    src_root = src_root or registry.SRC_ROOT
+    repo_root = repo_root or os.path.dirname(src_root)
+    modules = _iter_modules(src_root)
+    known = set(modules)
+    edges = {mod: _imports_of(path, mod, known)
+             for mod, path in sorted(modules.items())}
+
+    # a package entry point is runnable via `python -m pkg`: its __main__
+    # is part of the entry surface
+    roots = [ep for e in registry.ENTRY_POINTS
+             for ep in (e, f"{e}.__main__")]
+    runtime = _closure(roots, edges, known)
+    aux_imports = _aux_roots(repo_root, known)
+    aux = _closure(aux_imports, edges, known) - runtime
+    orphan = known - runtime - aux
+
+    quarantined = _closure(registry.DEADCODE_QUARANTINE, edges, known) \
+        - runtime
+    return {
+        "modules": sorted(known),
+        "runtime": sorted(runtime),
+        "aux": sorted(aux),
+        "orphan": sorted(orphan),
+        "quarantined": sorted(quarantined),
+        "aux_importers": {m: sorted(files)
+                          for m, files in sorted(aux_imports.items())
+                          if m in aux},
+        "stale_quarantine": sorted(
+            m for m in registry.DEADCODE_QUARANTINE
+            if m in runtime or m not in known),
+    }
+
+
+def run(src_root: str = None, repo_root: str = None) -> PassResult:
+    result = PassResult(name="deadcode")
+    rep = analyze(src_root, repo_root)
+    result.checked = len(rep["modules"])
+    quarantine = set(rep["quarantined"])
+
+    for mod in rep["orphan"]:
+        if mod in quarantine:
+            result.skipped.append(f"{mod}: orphan, quarantined")
+            continue
+        result.add("orphan-module", mod, 0,
+                   "reachable from no entry point, test, benchmark or "
+                   "example — delete it or add it to DEADCODE_QUARANTINE "
+                   "with a reason")
+    for mod in rep["aux"]:
+        if mod in quarantine:
+            result.skipped.append(f"{mod}: aux-only, quarantined")
+            continue
+        importers = ", ".join(rep["aux_importers"].get(mod, ["?"])[:3])
+        result.add("aux-only-module", mod, 0,
+                   f"kept alive only by {importers} — quarantine it in "
+                   "DEADCODE_QUARANTINE (recorded decision) or delete "
+                   "module + scaffold together")
+    for mod in rep["stale_quarantine"]:
+        why = ("runtime-reachable again" if mod in rep["runtime"]
+               else "no longer exists")
+        result.add("stale-quarantine", mod, 0,
+                   f"DEADCODE_QUARANTINE entry is stale: module is {why}")
+    return result

@@ -1,0 +1,345 @@
+"""AST contract linter over ``src/`` (no jax import, pure ``ast``).
+
+Three rule families, all driven by :mod:`repro.analysis.registry`:
+
+* **single-compute-site**: the paper-level operations with exactly one
+  registered home — subspace tracking ``S + G - G_prev``, direct
+  ``jnp.linalg.qr``, the bf16 wire round-trip, and re-definitions of the
+  reserved seam functions (``tracking_update``/``qr_orth``/``rebase_carry``
+  /``quantize_wire``).  A match outside the registry's ``allowed`` set
+  fails the build; so does a registered definition that no longer exists.
+* **bare-assert ban**: library validation must raise (``validate_*`` /
+  ``ValueError``) — ``python -O`` strips ``assert`` statements, the PR-2
+  ``validate_mixing`` bug class.  Quarantined LM-scaffold modules are
+  exempt (:data:`repro.analysis.registry.ASSERT_QUARANTINE`).
+* **host-sync lint**: ``.item()`` / ``float()``/``int()`` on traced
+  arguments / ``np.asarray``-family calls inside jit-scoped code (jitted
+  functions, and functions handed to ``lax.scan``/``cond``/``fori_loop``/
+  ``pallas_call``/``shard_map``) force a device sync or fail outright
+  under jit — the ``ConsensusEngine._L`` tracer-leak bug class.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+from . import registry
+from .report import PassResult
+
+#: Leaf names whose Sub-operand marks Eqn.-(3.1) tracking arithmetic.
+_PREV_LIKE = re.compile(r"(?i)^(g|p|w|s)?_?prev$|^gp$")
+
+#: Leaf names that mark a wire-precision cast target.
+_WIRE_LIKE = re.compile(r"(?i)bfloat16|bf16|wire|float8|fp8")
+
+#: Callables whose function-valued arguments run under a trace.
+_TRACING_CALLS = {"scan", "fori_loop", "while_loop", "cond", "switch",
+                  "pallas_call", "shard_map", "vmap", "remat", "checkpoint"}
+
+#: np-namespace roots whose asarray/array force host materialisation.
+_HOST_NP_ROOTS = {"np", "numpy", "onp"}
+
+
+def _leaf_name(node: ast.AST) -> Optional[str]:
+    """Rightmost identifier of a Name/Attribute/Subscript chain."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Subscript):
+        return _leaf_name(node.value)
+    return None
+
+
+def _attr_chain(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``a.b.c`` -> ("a", "b", "c"); None for non-pure chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _static_argnames(keywords: Sequence[ast.keyword]) -> Set[str]:
+    for kw in keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return {e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)}
+    return set()
+
+
+def _jit_decoration(node: ast.AST) -> Optional[Set[str]]:
+    """Static argnames if ``node`` is jit/shard_map-decorated, else None."""
+    for dec in getattr(node, "decorator_list", ()):
+        if isinstance(dec, ast.Call):
+            fleaf = _leaf_name(dec.func)
+            if fleaf == "partial" and dec.args and \
+                    _leaf_name(dec.args[0]) in ("jit", "shard_map"):
+                return _static_argnames(dec.keywords)
+            if fleaf in ("jit", "shard_map"):
+                return _static_argnames(dec.keywords)
+        elif _leaf_name(dec) == "jit":
+            return set()
+    return None
+
+
+class _TracedNameCollector(ast.NodeVisitor):
+    """Names of functions passed into tracing machinery in this module."""
+
+    def __init__(self) -> None:
+        self.names: Set[str] = set()
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if _leaf_name(node.func) in _TRACING_CALLS:
+            cands = list(node.args) + [kw.value for kw in node.keywords]
+            for arg in cands:
+                if isinstance(arg, ast.Name):
+                    self.names.add(arg.id)
+                elif isinstance(arg, ast.Call) and \
+                        _leaf_name(arg.func) == "partial" and arg.args and \
+                        isinstance(arg.args[0], ast.Name):
+                    self.names.add(arg.args[0].id)
+        self.generic_visit(node)
+
+
+class _Scope:
+    """One function on the lexical stack, with its trace-scope facts."""
+
+    def __init__(self, node, jit_static: Optional[Set[str]],
+                 traced: bool, parent_traced: bool) -> None:
+        self.name = node.name
+        args = node.args
+        self.params = {a.arg for a in (args.posonlyargs + args.args
+                                       + args.kwonlyargs)}
+        if args.vararg:
+            self.params.add(args.vararg.arg)
+        if args.kwarg:
+            self.params.add(args.kwarg.arg)
+        # kernel/scan bodies get their static config bound via
+        # functools.partial keywords, which surface as keyword-only args
+        self.static = (set(jit_static) if jit_static is not None
+                       else {a.arg for a in args.kwonlyargs})
+        self.in_trace = jit_static is not None or traced or parent_traced
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, relpath: str, module: str, result: PassResult,
+                 traced_names: Set[str]) -> None:
+        self.relpath = relpath
+        self.module = module
+        self.result = result
+        self.traced_names = traced_names
+        self.scopes: List[_Scope] = []
+        self.defs: Set[Tuple[str, str]] = set()   # (relpath, funcname) seen
+        self._consumed: Set[int] = set()          # inner nodes already flagged
+
+    # ----------------------------------------------------------- helpers
+    def _enclosing(self) -> str:
+        return self.scopes[-1].name if self.scopes else "<module>"
+
+    def _allowed(self, site: registry.ComputeSite) -> bool:
+        # a match anywhere lexically inside a registered function counts as
+        # that site (kernels nest their tail work in pl.when closures)
+        return any((self.relpath, s.name) in site.allowed
+                   for s in self.scopes) or \
+            (self.relpath, self._enclosing()) in site.allowed
+
+    def _site(self, pattern: str) -> registry.ComputeSite:
+        for site in registry.COMPUTE_SITES:
+            if site.pattern == pattern:
+                return site
+        raise KeyError(pattern)
+
+    def _flag_site(self, site: registry.ComputeSite, node: ast.AST,
+                   what: str) -> None:
+        self.result.add(
+            "duplicate-compute-site", self.relpath, node.lineno,
+            f"{what} in {self._enclosing()}() duplicates the "
+            f"'{site.name}' compute site — {site.doc}")
+
+    def _in_trace_scope(self) -> bool:
+        return bool(self.scopes) and self.scopes[-1].in_trace
+
+    # ------------------------------------------------------ scope handling
+    def _visit_func(self, node) -> None:
+        jit_static = _jit_decoration(node)
+        traced = node.name in self.traced_names
+        parent = bool(self.scopes) and self.scopes[-1].in_trace
+        self.defs.add((self.relpath, node.name))
+        self._check_reserved_def(node)
+        self.scopes.append(_Scope(node, jit_static, traced, parent))
+        self.generic_visit(node)
+        self.scopes.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _check_reserved_def(self, node) -> None:
+        homes = registry.RESERVED_DEFS.get(node.name)
+        if homes is not None and self.relpath not in homes \
+                and not self.scopes:          # methods/inner helpers are fine
+            self.result.add(
+                "duplicate-compute-site", self.relpath, node.lineno,
+                f"re-definition of reserved seam function "
+                f"'{node.name}' (registered home(s): {', '.join(homes)})")
+
+    # ------------------------------------------------------------- asserts
+    def visit_Assert(self, node: ast.Assert) -> None:
+        quarantined = any(self.module == q or self.module.startswith(q + ".")
+                          for q in registry.ASSERT_QUARANTINE)
+        if not quarantined:
+            self.result.add(
+                "bare-assert", self.relpath, node.lineno,
+                f"bare assert in {self._enclosing()}() — `python -O` strips "
+                "it; raise ValueError (validate_* style) instead")
+        self.generic_visit(node)
+
+    # ------------------------------------------------------------ tracking
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, ast.Sub) and \
+                isinstance(node.left, ast.BinOp) and \
+                isinstance(node.left.op, ast.Add):
+            rname = _leaf_name(node.right)
+            if rname and _PREV_LIKE.match(rname):
+                site = self._site("tracking")
+                if not self._allowed(site):
+                    self._flag_site(
+                        site, node,
+                        f"tracking arithmetic `... + ... - {rname}`")
+        self.generic_visit(node)
+
+    # --------------------------------------------------------------- calls
+    def visit_Call(self, node: ast.Call) -> None:
+        self._check_linalg_qr(node)
+        self._check_wire_roundtrip(node)
+        self._check_host_sync(node)
+        self.generic_visit(node)
+
+    def _check_linalg_qr(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        if chain and len(chain) >= 3 and chain[-2:] == ("linalg", "qr") \
+                and chain[0] in ("jnp", "jax"):
+            site = self._site("linalg-qr")
+            if not self._allowed(site):
+                self._flag_site(site, node, f"direct {'.'.join(chain)} call")
+
+    def _check_wire_roundtrip(self, node: ast.Call) -> None:
+        if id(node) in self._consumed:
+            return
+        if not (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype" and node.args):
+            return
+        inner = node.func.value
+        chained = (isinstance(inner, ast.Call)
+                   and isinstance(inner.func, ast.Attribute)
+                   and inner.func.attr == "astype" and inner.args)
+        if chained:
+            self._consumed.add(id(inner))
+            target = _leaf_name(inner.args[0])
+        else:
+            target = _leaf_name(node.args[0])
+        if target and _WIRE_LIKE.search(target):
+            site = self._site("wire-roundtrip")
+            if not self._allowed(site):
+                what = ("wire-dtype round-trip `.astype(...).astype(...)`"
+                        if chained else f"cast to wire dtype '{target}'")
+                self._flag_site(site, node, what)
+
+    def _check_host_sync(self, node: ast.Call) -> None:
+        if not self._in_trace_scope():
+            return
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            self.result.add(
+                "host-sync", self.relpath, node.lineno,
+                f".item() inside jit-scoped {self._enclosing()}() forces a "
+                "host sync (fails on tracers)")
+            return
+        chain = _attr_chain(node.func)
+        if chain and chain[-1] in ("asarray", "array") and \
+                chain[0] in _HOST_NP_ROOTS:
+            self.result.add(
+                "host-sync", self.relpath, node.lineno,
+                f"{'.'.join(chain)}() inside jit-scoped "
+                f"{self._enclosing()}() materialises on host "
+                "(fails on tracers); use jnp")
+            return
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in ("float", "int") and len(node.args) == 1:
+            scope = self.scopes[-1]
+            name = _leaf_name(node.args[0])
+            if name and name in scope.params and name not in scope.static:
+                self.result.add(
+                    "host-sync", self.relpath, node.lineno,
+                    f"{node.func.id}({name}) on a traced argument of "
+                    f"jit-scoped {self._enclosing()}() (mark it static or "
+                    "keep it an array)")
+
+
+def iter_source_files(root: str) -> Iterable[Tuple[str, str]]:
+    """Yield ``(relpath, abspath)`` for every .py under ``root``."""
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__",))
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                ap = os.path.join(dirpath, fn)
+                yield os.path.relpath(ap, root), ap
+
+
+def lint_file(relpath: str, abspath: str, result: PassResult
+              ) -> Set[Tuple[str, str]]:
+    """Lint one file into ``result``; returns the (relpath, def) set seen."""
+    with open(abspath) as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=abspath)
+    except SyntaxError as e:
+        result.add("syntax-error", relpath, e.lineno or 0, str(e))
+        return set()
+    module = relpath[:-3].replace(os.sep, ".")
+    if module.endswith(".__init__"):
+        module = module[: -len(".__init__")]
+    collector = _TracedNameCollector()
+    collector.visit(tree)
+    linter = _Linter(relpath, module, result, collector.names)
+    linter.visit(tree)
+    return linter.defs
+
+
+def run(files: Optional[Sequence[str]] = None,
+        src_root: Optional[str] = None) -> PassResult:
+    """Lint the repo's ``src`` tree (default) or an explicit file list.
+
+    With explicit ``files`` (fixture mode) paths are keyed by basename, so
+    nothing matches the registry's allowed sites and the registered-
+    definition existence check is skipped.
+    """
+    result = PassResult(name="lint")
+    root = src_root or registry.SRC_ROOT
+    defs: Set[Tuple[str, str]] = set()
+    if files is not None:
+        for f in files:
+            defs |= lint_file(os.path.basename(f), f, result)
+            result.checked += 1
+        return result
+    for rel, ap in iter_source_files(root):
+        defs |= lint_file(rel, ap, result)
+        result.checked += 1
+    for site in registry.COMPUTE_SITES:
+        if site.definition not in defs:
+            result.add(
+                "missing-definition", site.definition[0], 0,
+                f"registered compute site '{site.name}' definition "
+                f"{site.definition[1]}() not found — update "
+                "repro/analysis/registry.py")
+    return result

@@ -159,7 +159,10 @@ def restore(ckpt_dir: str, template: PyTree, step: Optional[int] = None,
         key = _SEP.join(_path_str(p) for p in pth)
         arr = data[key]
         want = np.asarray(leaf).shape
-        assert arr.shape == want, (key, arr.shape, want)
+        if arr.shape != want:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {arr.shape}, template "
+                f"wants {want}")
         new_leaves.append(shard_fn(key, arr) if shard_fn else arr)
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
 

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.step import sign_adjust
+from repro.core.step import qr_orth, sign_adjust
 from repro.kernels.fastmix import tracking_update
 from repro.core.mixing import fastmix, fastmix_eta
 from repro.core.topology import Topology
@@ -138,7 +138,7 @@ class DeEPCACompressor:
             # subspace tracking + FastMix (Alg. 1 lines 4-5)
             S = mix(tracking_update(st.S, P, st.P_prev))
             # local QR + sign adjustment (Alg. 1 line 6 / Alg. 2)
-            Phat = jnp.linalg.qr(S)[0]
+            Phat = qr_orth(S)
             Phat = sign_adjust(Phat, Phat[0])
             # right factor: Q_j = G_j^T Phat_j, gossip-averaged
             Q = mix(jnp.einsum("mod,mor->mdr", gm, Phat))

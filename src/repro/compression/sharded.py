@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.gossip_shard import fastmix_local, make_round_fn
 from repro.core.mixing import fastmix_eta
-from repro.core.step import sign_adjust
+from repro.core.step import qr_orth, sign_adjust
 from repro.core.topology import Topology
 from repro.kernels.fastmix import tracking_update
 
@@ -31,7 +31,7 @@ def leaf_state_init(leaf, rank: int, key) -> LeafState:
     d_in = leaf.shape[-1]
     d_out = int(np.prod(leaf.shape[:-1]))
     dt = leaf.dtype
-    q0 = jnp.linalg.qr(jax.random.normal(key, (d_in, rank), dt))[0]
+    q0 = qr_orth(jax.random.normal(key, (d_in, rank), dt))
     return LeafState(Q=q0,
                      S=jnp.zeros((d_out, rank), dt),
                      P_prev=jnp.zeros((d_out, rank), dt),
@@ -72,7 +72,7 @@ def compress_local(grads: PyTree, state: Dict[str, LeafState], *,
         gm = g.reshape(-1, g.shape[-1]) + st.err
         P = gm @ st.Q
         S = mix(tracking_update(st.S, P, st.P_prev))
-        Phat = jnp.linalg.qr(S)[0]
+        Phat = qr_orth(S)
         Phat = sign_adjust(Phat, jnp.abs(Phat))   # deterministic sign fix
         Q = mix(gm.T @ Phat)
         ghat = Phat @ Q.T

@@ -4,10 +4,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .step import qr_orth
+
 
 def _orthonormalize(X: jax.Array) -> jax.Array:
-    q, _ = jnp.linalg.qr(X)
-    return q
+    # the shared Eqn.-(3.3) compute site; every angle metric below is
+    # invariant to the basis-of-span it returns
+    return qr_orth(X)
 
 
 def principal_angles(U: jax.Array, X: jax.Array) -> jax.Array:

@@ -36,7 +36,10 @@ class SyntheticTokenStream:
     """
 
     def __init__(self, cfg: TokenStreamConfig):
-        assert cfg.global_batch % cfg.n_hosts == 0
+        if cfg.global_batch % cfg.n_hosts:
+            raise ValueError(
+                f"global_batch={cfg.global_batch} must divide evenly "
+                f"across n_hosts={cfg.n_hosts}")
         self.cfg = cfg
         self.local_batch = cfg.global_batch // cfg.n_hosts
         self._step = 0

@@ -49,6 +49,7 @@ may differ from Householder's — every algorithm call site runs Alg. 2
 """
 from __future__ import annotations
 
+import functools
 import os
 from typing import Optional
 
@@ -188,6 +189,8 @@ def _chol_pass(X: jax.Array, *, use_kernel: bool, block_n: Optional[int],
     return _apply_rinv(X, _chol_small(G, pivot_floor=_pivot_floor(G)))
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "block_n", "interpret"))
 def cholqr2(X: jax.Array, *, use_kernel: Optional[bool] = None,
             block_n: Optional[int] = None,
             interpret: Optional[bool] = None) -> jax.Array:
@@ -197,6 +200,13 @@ def cholqr2(X: jax.Array, *, use_kernel: Optional[bool] = None,
     x64 paper-fidelity runs chase 1e-12 targets and must not round-trip).
     Ill-conditioned batch elements are rescued with a shifted first pass
     plus a conditionally-executed third pass (see module docstring).
+
+    Jitted at definition (config kwargs static): *eager* callers — the
+    streaming tracker's per-tick drift statistic, metrics on small
+    factors — hit one stable program-cache entry instead of re-tracing
+    the ``lax.cond`` rescue branch (whose fresh branch closures defeat
+    the eager dispatch cache) on every call.  Inside an outer jit the
+    nested call is inlined as usual.
     """
     d, k = X.shape[-2], X.shape[-1]
     if k > d or k > MAX_UNROLL_K:      # no Gram route / unroll budget blown

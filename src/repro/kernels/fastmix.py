@@ -177,7 +177,9 @@ def _fastmix_fused(S: jax.Array, L: jax.Array, eta, K: int, *,
     if K <= 0:
         return S.astype(jnp.float32)
     m = S.shape[0]
-    assert L.shape == (m, m), (S.shape, L.shape)
+    if L.shape != (m, m):
+        raise ValueError(f"L must be ({m}, {m}) for S {S.shape}; "
+                         f"got {L.shape}")
     n = 1
     for s in S.shape[1:]:
         n *= s
@@ -250,8 +252,12 @@ def _fastmix_track_fused(S: jax.Array, G: jax.Array, G_prev: jax.Array,
                          L: jax.Array, eta, K: int, *, block_n: int,
                          interpret: bool, wire_bf16: bool) -> jax.Array:
     m = S.shape[0]
-    assert S.shape == G.shape == G_prev.shape, (S.shape, G.shape, G_prev.shape)
-    assert L.shape == (m, m), (S.shape, L.shape)
+    if not (S.shape == G.shape == G_prev.shape):
+        raise ValueError("S/G/G_prev shapes must match; got "
+                         f"{S.shape}, {G.shape}, {G_prev.shape}")
+    if L.shape != (m, m):
+        raise ValueError(f"L must be ({m}, {m}) for S {S.shape}; "
+                         f"got {L.shape}")
     if K <= 0:
         return tracking_update(S, G, G_prev).astype(jnp.float32)
     n = 1
@@ -378,6 +384,47 @@ def _apply_track_kernel(eta_ref, l_ref, a_ref, w_ref, s_ref, gp_ref,
         snew_ref[...] = cur
 
 
+def apply_track_vmem_words(m: int, d: int, k: int, block_d: int,
+                           block_e: int, *, interpret: bool = False) -> int:
+    """Modeled fp32-word VMEM working set of one ``apply_track`` grid step.
+
+    The docstring model below (A/W tiles double buffered, L resident,
+    S/G_prev/G/S_new blocks) — shared with the static budget checker
+    (:mod:`repro.analysis.budget`) so the kernel's default resolution and
+    CI's over-budget gate agree by construction.
+    """
+    mp = _round_up(m, 8)
+    kp = _round_up(k, 8 if interpret else 128)
+    bd = _round_up(min(block_d, d), 8)
+    be = _round_up(min(block_e, d), 8 if interpret else 128)
+    return mp * mp + mp * (2 * bd * be + 2 * be * kp + 4 * bd * kp)
+
+
+def apply_track_default_tiles(m: int, d: int, k: int, *,
+                              interpret: bool = False):
+    """Shape-aware built-in ``(block_d, block_e)`` for ``apply_track``.
+
+    Starts from the bench-tuned (64, 256) and halves the tiles —
+    contraction width first, it is the bigger buffer — until the modeled
+    working set fits the default VMEM budget.  The agent axis rides the
+    tiles as a batch dim, so large-m problems need smaller tiles: at
+    m=64, d=4096, k=32 the (64, 256) start needs ~32 MiB and this
+    resolves (32, 128) instead (~14 MiB).  An autotune-cache entry still
+    overrides (and the budget pass checks every recorded entry).
+    """
+    from repro.analysis.registry import vmem_budget
+    budget_words = vmem_budget("default") // 4
+    bd, be = 64, 256
+    floor_e = 8 if interpret else 128
+    while (apply_track_vmem_words(m, d, k, bd, be, interpret=interpret)
+           > budget_words and (bd > 8 or be > floor_e)):
+        if be > floor_e:
+            be //= 2
+        else:
+            bd //= 2
+    return bd, be
+
+
 def apply_track_fused(A: jax.Array, W: jax.Array, S: jax.Array,
                       G_prev: jax.Array, L: jax.Array, eta, K: int, *,
                       block_d: Optional[int] = None,
@@ -412,15 +459,21 @@ def apply_track_fused(A: jax.Array, W: jax.Array, S: jax.Array,
       ``(S_new, G)`` — both ``(m, d, k)`` fp32.
     """
     m, d, k = W.shape
-    assert A.shape == (m, d, d), (A.shape, W.shape)
-    assert S.shape == G_prev.shape == (m, d, k), (S.shape, G_prev.shape)
-    assert L.shape == (m, m), (L.shape,)
+    if A.shape != (m, d, d):
+        raise ValueError(f"A must be ({m}, {d}, {d}) for W {W.shape}; "
+                         f"got {A.shape}")
+    if not (S.shape == G_prev.shape == (m, d, k)):
+        raise ValueError(f"S/G_prev must be ({m}, {d}, {k}); got "
+                         f"{S.shape}, {G_prev.shape}")
+    if L.shape != (m, m):
+        raise ValueError(f"L must be ({m}, {m}); got {L.shape}")
+    bd0, be0 = apply_track_default_tiles(m, d, k, interpret=interpret)
     if block_d is None:
         block_d = autotune.resolve("apply_track", "block_d", (m, d, k),
-                                   W.dtype, default=64)
+                                   W.dtype, default=bd0)
     if block_e is None:
         block_e = autotune.resolve("apply_track", "block_e", (m, d, k),
-                                   W.dtype, default=256)
+                                   W.dtype, default=be0)
     return _apply_track_fused(A, W, S, G_prev, L, eta, K,
                               block_d=int(block_d), block_e=int(block_e),
                               interpret=interpret, wire_bf16=wire_bf16)

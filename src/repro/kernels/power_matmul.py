@@ -60,7 +60,9 @@ def _power_matmul(a: jax.Array, w: jax.Array, *, block_m: int,
                   block_k: int, interpret: bool) -> jax.Array:
     d, d2 = a.shape
     dk, k = w.shape
-    assert d == d2 == dk, (a.shape, w.shape)
+    if not (d == d2 == dk):
+        raise ValueError(f"a must be square (d, d) with w (d, k); got "
+                         f"a {a.shape}, w {w.shape}")
     kp = max(128, -(-k // 128) * 128)
     mp = -(-d // block_m) * block_m
     cp = -(-d // block_k) * block_k

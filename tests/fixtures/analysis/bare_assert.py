@@ -1,0 +1,11 @@
+"""Fixture: bare assert in a library validation path.
+
+``python -O`` strips asserts, so shape/shape-compat validation that
+gates numerical correctness must raise instead.  The lint pass flags
+every ``assert`` outside the quarantined scaffold modules.
+"""
+
+
+def validate_shapes(S, G):
+    assert S.shape == G.shape, "shape mismatch"     # bare-assert
+    return True

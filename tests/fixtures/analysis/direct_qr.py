@@ -1,0 +1,15 @@
+"""Fixture: bypassing the qr_orth seam with a direct LAPACK QR.
+
+Must be flagged: direct ``jnp.linalg.qr`` skips the CholeskyQR2/
+Householder implementation swap (REPRO_QR_IMPL + autotune pinning).
+"""
+import jax.numpy as jnp
+
+
+def orthonormalize(X):
+    return jnp.linalg.qr(X)[0]         # duplicate-compute-site: qr
+
+
+def wire_roundtrip(x):
+    # duplicate-compute-site: bf16 wire rounding outside quantize_wire
+    return x.astype(jnp.bfloat16).astype(jnp.float32)

@@ -1,0 +1,14 @@
+"""Fixture: a SECOND home for the Eqn. (3.1) tracking arithmetic.
+
+The lint pass must flag the inlined ``S + G - G_prev`` (it only tolerates
+the registered compute site and its in-kernel mirrors) AND the shadowing
+redefinition of the reserved ``tracking_update`` name.
+"""
+
+
+def sneaky_combine(S, G, G_prev):
+    return S + G - G_prev              # duplicate-compute-site: tracking
+
+
+def tracking_update(S, G, G_prev):     # reserved-def outside fastmix.py
+    return S + (G - G_prev)

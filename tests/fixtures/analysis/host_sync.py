@@ -1,0 +1,21 @@
+"""Fixture: host-synchronizing calls on traced values inside jitted code.
+
+``.item()`` / ``float()`` / ``np.asarray`` on a traced array force a
+device sync (or a tracer error) inside jit; the lint pass flags them
+when the enclosing function is jit-decorated or passed to a tracing
+transform.
+"""
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_norm(x):
+    return x / x.sum().item()          # host-sync: .item() on traced value
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def bad_scale(x, k):
+    return np.asarray(x) * k           # host-sync: np.asarray on tracer
