@@ -78,8 +78,8 @@ def stage_rows(name: str, ops, topo, W0, K: int, writer, json_rows) -> None:
 
 def run_dataset(name: str, spec: dict, writer, json_rows, *,
                 T_run: int = T, k_sweep=K_SWEEP) -> dict:
-    import jax
-    jax.config.update("jax_enable_x64", True)   # paper plots reach 1e-12
+    from repro.runtime.config import configure
+    configure(x64=True)                         # paper plots reach 1e-12
     ops = libsvm_like(spec["m"], spec["n"], spec["d"], seed=0,
                       dtype=jnp.float64)
     A = ops.mean_matrix()
@@ -184,7 +184,12 @@ if __name__ == "__main__":
     rows = main(quick=quick)
     if json_path is not None:
         from repro.kernels import autotune
+        from repro.runtime import config as runtime_config
         with open(json_path, "w") as f:
             json.dump({"bench": "deepca", "device": autotune.device_kind(),
-                       "quick": quick, "rows": rows}, f, indent=1)
+                       "quick": quick, "rows": rows,
+                       "config": runtime_config.describe(),
+                       "written_at": time.strftime(
+                           "%Y-%m-%dT%H:%M:%SZ", time.gmtime())},
+                      f, indent=1)
         print(f"\n[json] wrote {json_path}", file=sys.stderr)

@@ -1,0 +1,217 @@
+"""Row-by-row regression diff for the committed bench JSON snapshots.
+
+``benchmarks/run.py --json`` exports ``BENCH_kernels.json`` /
+``BENCH_deepca.json`` — the perf-trajectory baselines committed at the
+repo root.  This tool compares a fresh export against a committed
+baseline and exits nonzero when any metric regressed, so CI gates PRs on
+the recorded numbers instead of merely re-measuring them.
+
+Rows are matched by ``name`` (the intersection — a quick-grid export only
+diffs the rows it shares with the baseline) and each shared metric is
+judged by class:
+
+* **wall-clock** (``us`` — the measured fast-path time): loose *ratio*
+  tolerance (default 2.5x — CI runners are noisy; the gate catches
+  order-of-magnitude cliffs, not jitter);
+* **accuracy** (``parity``, ``orth``, ``subspace_vs_qr``, ``final_tan``,
+  ``max_abs_diff``): strict — a candidate value must stay within
+  ``acc_ratio`` of the baseline or under the row's own ``tol`` /
+  ``acc_floor``, whichever is largest (a convergence break blows these
+  up by many orders of magnitude);
+* **ok flags**: ``True -> False`` is always a regression (the bench's
+  own parity gate started failing); ``False -> True`` is reported as an
+  improvement;
+* **tolerances**: a row whose ``tol`` *loosened* is a regression —
+  widening the goalposts must not sneak past the diff;
+* **``rounds``**: exact — the communication-round count is determined by
+  (T, K); a drift means the algorithm changed, not the machine.
+
+``speedup`` columns are ignored (a ratio of two wall-clocks double-counts
+timing noise), and so are the reference-baseline timings (``ref_us``,
+``householder_us``, ``v5e_roofline_us``): a slower *oracle* is not a
+product regression, and the jnp reference times have been observed to
+jitter >10x between runs on one machine.  Baseline rows missing from the
+candidate warn by default;
+``--require-rows`` promotes them to regressions.  An empty intersection
+always fails — a diff that compared nothing must not pass as green.
+
+Importable: :func:`diff` takes two parsed payloads and returns the report
+dict; :func:`main` is the CLI (``--report PATH`` writes the report JSON).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+WALLCLOCK_KEYS = ("us",)
+ACCURACY_KEYS = ("parity", "orth", "subspace_vs_qr", "final_tan",
+                 "max_abs_diff")
+EXACT_KEYS = ("rounds",)
+
+#: Wall-clock ratio gate: candidate/baseline above this fails.
+DEFAULT_US_RATIO = 2.5
+#: Accuracy ratio gate (baseline-relative) for the strict metric class.
+DEFAULT_ACC_RATIO = 10.0
+#: Absolute floor under which accuracy metrics never regress — values at
+#: 1e-12 jitter by large *ratios* while staying numerically perfect.
+DEFAULT_ACC_FLOOR = 1e-6
+
+
+def load(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        payload = json.load(f)
+    if "rows" not in payload or not isinstance(payload["rows"], list):
+        raise ValueError(f"{path}: not a bench export (no 'rows' list)")
+    return payload
+
+
+def _index(payload: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
+    return {r["name"]: r for r in payload["rows"] if "name" in r}
+
+
+def diff(baseline: Dict[str, Any], candidate: Dict[str, Any], *,
+         us_ratio: float = DEFAULT_US_RATIO,
+         acc_ratio: float = DEFAULT_ACC_RATIO,
+         acc_floor: float = DEFAULT_ACC_FLOOR,
+         require_rows: bool = False) -> Dict[str, Any]:
+    """Compare ``candidate`` against ``baseline``; see module docstring
+    for the per-metric-class rules.  Returns the report dict (``ok`` is
+    False iff any regression fired)."""
+    regressions: List[str] = []
+    warnings: List[str] = []
+    improvements: List[str] = []
+
+    for meta in ("bench", "device", "quick"):
+        a, b = baseline.get(meta), candidate.get(meta)
+        if a != b:
+            warnings.append(f"{meta} mismatch: baseline={a!r} "
+                            f"candidate={b!r}")
+
+    base = _index(baseline)
+    cand = _index(candidate)
+    missing = sorted(set(base) - set(cand))
+    new = sorted(set(cand) - set(base))
+    for name in missing:
+        msg = f"row missing from candidate: {name}"
+        (regressions if require_rows else warnings).append(msg)
+    if new:
+        warnings.append(f"{len(new)} rows only in candidate "
+                        f"(new benches): {', '.join(new[:5])}"
+                        + (" ..." if len(new) > 5 else ""))
+
+    shared = sorted(set(base) & set(cand))
+    compared = 0
+    for name in shared:
+        a, b = base[name], cand[name]
+        compared += 1
+
+        if a.get("ok") is True and b.get("ok") is False:
+            regressions.append(f"{name}: ok True -> False "
+                               "(bench parity gate now failing)")
+        elif a.get("ok") is False and b.get("ok") is True:
+            improvements.append(f"{name}: ok False -> True")
+
+        if "tol" in a and "tol" in b and float(b["tol"]) > float(a["tol"]):
+            regressions.append(
+                f"{name}: tol loosened {a['tol']:g} -> {b['tol']:g}")
+
+        for key in WALLCLOCK_KEYS:
+            if key not in a or key not in b:
+                continue
+            va, vb = float(a[key]), float(b[key])
+            if va <= 0.0:
+                continue
+            ratio = vb / va
+            if ratio > us_ratio:
+                regressions.append(
+                    f"{name}: {key} {va:g} -> {vb:g} "
+                    f"({ratio:.2f}x > {us_ratio:g}x gate)")
+            elif ratio < 1.0 / us_ratio:
+                improvements.append(
+                    f"{name}: {key} {va:g} -> {vb:g} ({ratio:.2f}x)")
+
+        for key in ACCURACY_KEYS:
+            if key not in a or key not in b:
+                continue
+            va, vb = float(a[key]), float(b[key])
+            floor = max(acc_floor, float(a.get("tol", 0.0)))
+            allowed = max(va * acc_ratio, floor)
+            if vb > allowed:
+                regressions.append(
+                    f"{name}: {key} {va:.3e} -> {vb:.3e} "
+                    f"(allowed <= {allowed:.3e})")
+            elif va > floor and vb < va / acc_ratio:
+                improvements.append(
+                    f"{name}: {key} {va:.3e} -> {vb:.3e}")
+
+        for key in EXACT_KEYS:
+            if key in a and key in b and float(a[key]) != float(b[key]):
+                regressions.append(
+                    f"{name}: {key} changed {a[key]:g} -> {b[key]:g} "
+                    "(must match exactly)")
+
+    if compared == 0:
+        regressions.append(
+            "no comparable rows: baseline/candidate names are disjoint "
+            f"({len(base)} vs {len(cand)} rows) — a vacuous diff is not "
+            "a pass")
+
+    return {
+        "baseline": {k: baseline.get(k)
+                     for k in ("bench", "device", "quick", "written_at")},
+        "candidate": {k: candidate.get(k)
+                      for k in ("bench", "device", "quick", "written_at")},
+        "compared": compared,
+        "regressions": regressions,
+        "warnings": warnings,
+        "improvements": improvements,
+        "ok": not regressions,
+    }
+
+
+def render(report: Dict[str, Any]) -> str:
+    lines = [f"bench_diff: compared {report['compared']} shared rows "
+             f"({report['baseline'].get('bench')})"]
+    for label, items in (("REGRESSION", report["regressions"]),
+                         ("warning", report["warnings"]),
+                         ("improved", report["improvements"])):
+        for msg in items:
+            lines.append(f"  [{label}] {msg}")
+    lines.append("RESULT: " + ("OK" if report["ok"] else "REGRESSED"))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="diff two bench JSON exports; nonzero exit on "
+                    "regression")
+    p.add_argument("baseline", help="committed snapshot (the reference)")
+    p.add_argument("candidate", help="fresh export to judge")
+    p.add_argument("--us-ratio", type=float, default=DEFAULT_US_RATIO,
+                   help="wall-clock ratio gate (default %(default)s)")
+    p.add_argument("--acc-ratio", type=float, default=DEFAULT_ACC_RATIO,
+                   help="accuracy ratio gate (default %(default)s)")
+    p.add_argument("--acc-floor", type=float, default=DEFAULT_ACC_FLOOR,
+                   help="absolute accuracy floor (default %(default)s)")
+    p.add_argument("--require-rows", action="store_true",
+                   help="baseline rows missing from the candidate fail "
+                        "instead of warning")
+    p.add_argument("--report", metavar="PATH",
+                   help="also write the report dict as JSON")
+    args = p.parse_args(argv)
+
+    report = diff(load(args.baseline), load(args.candidate),
+                  us_ratio=args.us_ratio, acc_ratio=args.acc_ratio,
+                  acc_floor=args.acc_floor, require_rows=args.require_rows)
+    print(render(report))
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"[json] wrote {args.report}", file=sys.stderr)
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -281,10 +281,15 @@ def main(writer=None, quick: bool = False, record: bool = False,
     ok_step = step_rows(writer, rows, quick)
     ok_fused = fused_rows(writer, rows, quick)
     if json_path is not None:      # export BEFORE the parity gate, so a
+        from repro.runtime import config as runtime_config
         with open(json_path, "w") as f:    # failing run still ships rows
             json.dump({"bench": "kernels",
                        "device": autotune.device_kind(),
-                       "quick": quick, "rows": rows}, f, indent=1)
+                       "quick": quick, "rows": rows,
+                       "config": runtime_config.describe(),
+                       "written_at": time.strftime(
+                           "%Y-%m-%dT%H:%M:%SZ", time.gmtime())},
+                      f, indent=1)
         print(f"\n[json] wrote {json_path}", file=sys.stderr)
     bad = [r["name"] for r in rows if r.get("ok") is False]
     if not (ok_step and ok_fused) or bad:

@@ -37,18 +37,15 @@ from __future__ import annotations
 
 import csv
 import json
-import os
 import sys
 
 if __name__ == "__main__" and ("--sweep" in sys.argv
                                or "--batched" in sys.argv):
-    # must happen before the first jax backend initialisation; append so a
-    # pre-existing XLA_FLAGS doesn't silently drop the fake devices (an
-    # explicit --xla_force_host_platform_device_count in it still wins)
-    _flags = os.environ.get("XLA_FLAGS", "")
-    if "--xla_force_host_platform_device_count" not in _flags:
-        os.environ["XLA_FLAGS"] = (
-            _flags + " --xla_force_host_platform_device_count=16").strip()
+    # must happen before the first jax backend initialisation; configure()
+    # appends to XLA_FLAGS, and an explicit
+    # --xla_force_host_platform_device_count already present in it wins
+    from repro.runtime.config import configure
+    configure(host_device_count=16)
 
 import time
 

@@ -8,12 +8,16 @@ Prints ``name,us_per_call,derived`` CSV to stdout.
                        vs Householder, and the per-iteration step breakdown
   bench_compression -- DeEPCA-PowerSGD wire bytes + fidelity
 
-``--json`` additionally writes the perf-trajectory files at the **repo
-root** — ``BENCH_kernels.json`` (kernel + per-stage step breakdown: apply,
+``--json`` additionally writes the perf-trajectory files —
+``BENCH_kernels.json`` (kernel + per-stage step breakdown: apply,
 mix+track, orth, full seed-vs-fast path) and ``BENCH_deepca.json``
-(paper-workload convergence + its stage breakdown) — which are committed so
-future PRs can regress against the recorded numbers; CI uploads fresh
-copies as artifacts.  ``--quick`` shrinks every grid for smoke runs.
+(paper-workload convergence + its stage breakdown) — at the **repo root**
+by default (the committed regression baselines ``bench_diff.py`` gates
+against), or under ``--out DIR`` for fresh CI copies.  Each export is
+stamped with ``RuntimeConfig.describe()`` provenance (resolved knobs, raw
+env, jax backend/device/x64 state) plus a UTC timestamp, so a committed
+snapshot records what produced it.  ``--quick`` shrinks every grid for
+smoke runs.
 
 Runs both as a script (``python benchmarks/run.py``) and as a module
 (``python -m benchmarks.run``).
@@ -24,6 +28,7 @@ import csv
 import json
 import os
 import sys
+import time
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -38,10 +43,27 @@ def _import_benches():
     return bench_compression, bench_deepca, bench_kernels, bench_mixing
 
 
+def provenance() -> dict:
+    """The stamp every bench JSON carries: resolved RuntimeConfig +
+    raw env + jax device state, and when the export was written."""
+    from repro.runtime import config as runtime_config
+    return {"config": runtime_config.describe(),
+            "written_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())}
+
+
+def _arg_value(argv, flag, default=None):
+    if flag in argv:
+        idx = argv.index(flag) + 1
+        if idx < len(argv) and not argv[idx].startswith("--"):
+            return argv[idx]
+    return default
+
+
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     quick = "--quick" in argv
     want_json = "--json" in argv
+    out_dir = _arg_value(argv, "--out", REPO_ROOT)
     bench_compression, bench_deepca, bench_kernels, bench_mixing = \
         _import_benches()
     writer = csv.writer(sys.stdout)
@@ -53,13 +75,14 @@ def main(argv=None) -> None:
     if want_json:
         from repro.kernels import autotune
         device = autotune.device_kind()
+        os.makedirs(out_dir, exist_ok=True)
         for fname, bench, rows in (
                 ("BENCH_kernels.json", "kernels", kernel_rows),
                 ("BENCH_deepca.json", "deepca", deepca_rows)):
-            path = os.path.join(REPO_ROOT, fname)
+            path = os.path.join(out_dir, fname)
             with open(path, "w") as f:
                 json.dump({"bench": bench, "device": device, "quick": quick,
-                           "rows": rows}, f, indent=1)
+                           "rows": rows, **provenance()}, f, indent=1)
             print(f"[json] wrote {path}", file=sys.stderr)
 
 

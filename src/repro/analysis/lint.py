@@ -1,6 +1,6 @@
 """AST contract linter over ``src/`` (no jax import, pure ``ast``).
 
-Three rule families, all driven by :mod:`repro.analysis.registry`:
+Four rule families, all driven by :mod:`repro.analysis.registry`:
 
 * **single-compute-site**: the paper-level operations with exactly one
   registered home — subspace tracking ``S + G - G_prev``, direct
@@ -17,6 +17,12 @@ Three rule families, all driven by :mod:`repro.analysis.registry`:
   functions, and functions handed to ``lax.scan``/``cond``/``fori_loop``/
   ``pallas_call``/``shard_map``) force a device sync or fail outright
   under jit — the ``ConsensusEngine._L`` tracer-leak bug class.
+* **env-config lint**: direct ``os.environ``/``os.getenv`` access to
+  ``REPRO_*`` variables, and any ``jax.config`` mutation, outside the
+  registered config owner (:data:`repro.analysis.registry
+  .ENV_CONFIG_ALLOWED`, i.e. ``repro/runtime/config.py``) — the PR-7
+  refactor's no-backslide guarantee: every knob reads through the typed
+  ``RuntimeConfig`` surface.
 """
 from __future__ import annotations
 
@@ -223,6 +229,7 @@ class _Linter(ast.NodeVisitor):
         self._check_linalg_qr(node)
         self._check_wire_roundtrip(node)
         self._check_host_sync(node)
+        self._check_env_config_call(node)
         self.generic_visit(node)
 
     def _check_linalg_qr(self, node: ast.Call) -> None:
@@ -254,6 +261,53 @@ class _Linter(ast.NodeVisitor):
                 what = ("wire-dtype round-trip `.astype(...).astype(...)`"
                         if chained else f"cast to wire dtype '{target}'")
                 self._flag_site(site, node, what)
+
+    # ---------------------------------------------------------- env-config
+    def _flag_env_config(self, node: ast.AST, what: str) -> None:
+        if self.relpath.replace(os.sep, "/") in registry.ENV_CONFIG_ALLOWED:
+            return
+        self.result.add(
+            "env-config", self.relpath, node.lineno,
+            f"{what} in {self._enclosing()}() — REPRO_* env access and "
+            "jax.config mutation belong to repro/runtime/config.py: read "
+            "runtime.config.get_config(), set up via configure()")
+
+    @staticmethod
+    def _repro_key(node: Optional[ast.AST]) -> Optional[str]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+                and node.value.startswith("REPRO_"):
+            return node.value
+        return None
+
+    def _check_env_config_call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        if chain is None:
+            return
+        if chain in (("os", "environ", "get"), ("os", "environ", "pop"),
+                     ("os", "environ", "setdefault"), ("os", "getenv")):
+            key = self._repro_key(node.args[0] if node.args else None)
+            if key is not None:
+                self._flag_env_config(
+                    node, f"direct {'.'.join(chain)}({key!r})")
+        elif len(chain) >= 3 and chain[0] == "jax" \
+                and chain[-2:] == ("config", "update"):
+            self._flag_env_config(node, "jax.config.update(...)")
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        chain = _attr_chain(node.value)
+        if chain == ("os", "environ"):
+            key = self._repro_key(node.slice)
+            if key is not None:
+                self._flag_env_config(node, f"os.environ[{key!r}]")
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for target in node.targets:
+            chain = _attr_chain(target)
+            if chain and len(chain) >= 3 and chain[:2] == ("jax", "config"):
+                self._flag_env_config(
+                    node, f"assignment to {'.'.join(chain)}")
+        self.generic_visit(node)
 
     def _check_host_sync(self, node: ast.Call) -> None:
         if not self._in_trace_scope():

@@ -7,6 +7,8 @@ touches to:
   tracking arithmetic) by adding its ``(file, function)`` to the matching
   :class:`ComputeSite.allowed` set;
 * widen or narrow the **bare-assert ban** scope (:data:`ASSERT_QUARANTINE`);
+* widen the **env-config ownership** set (:data:`ENV_CONFIG_ALLOWED`) —
+  who may touch ``REPRO_*`` env vars / mutate ``jax.config``;
 * quarantine a seed module the **deadcode** pass flags
   (:data:`DEADCODE_QUARANTINE`) instead of deleting it;
 * adjust the **VMEM budget** (:data:`VMEM_BUDGET_BYTES`) or the
@@ -152,6 +154,20 @@ ASSERT_QUARANTINE: Tuple[str, ...] = (
     "repro.launch.specs",
     "repro.launch.steps",
 )
+
+
+# --------------------------------------------------------------------------
+# Env/config ownership (env-config lint pass)
+# --------------------------------------------------------------------------
+#: Files (src-relative, "/"-separated) allowed to read/write ``REPRO_*``
+#: environment variables and mutate ``jax.config``.  Exactly one entry by
+#: design: :mod:`repro.runtime.config` is the typed owner of the whole
+#: knob surface (parsing, validation, precedence); every other module
+#: consumes ``get_config()`` / ``configure()``.  Widening this set is a
+#: reviewed decision, not a convenience.
+ENV_CONFIG_ALLOWED: FrozenSet[str] = frozenset({
+    "repro/runtime/config.py",
+})
 
 
 # --------------------------------------------------------------------------

@@ -47,23 +47,26 @@ class _CompileHandler(logging.Handler):
 
 @contextlib.contextmanager
 def count_compiles() -> Iterator[_CompileHandler]:
-    """Context manager counting XLA compilations inside the block."""
-    import jax
+    """Context manager counting XLA compilations inside the block.
 
-    prev = jax.config.jax_log_compiles
-    jax.config.update("jax_log_compiles", True)
-    logger = logging.getLogger(_COMPILE_LOGGER)
-    prev_level = logger.level
-    if logger.getEffectiveLevel() > logging.WARNING:
-        logger.setLevel(logging.WARNING)
-    handler = _CompileHandler()
-    logger.addHandler(handler)
-    try:
-        yield handler
-    finally:
-        logger.removeHandler(handler)
-        logger.setLevel(prev_level)
-        jax.config.update("jax_log_compiles", prev)
+    The ``jax_log_compiles`` toggle goes through
+    :func:`repro.runtime.config.log_compiles` — ``jax.config`` mutation
+    outside ``runtime/config.py`` is banned by the env-config lint pass.
+    """
+    from repro.runtime import config as runtime_config
+
+    with runtime_config.log_compiles(True):
+        logger = logging.getLogger(_COMPILE_LOGGER)
+        prev_level = logger.level
+        if logger.getEffectiveLevel() > logging.WARNING:
+            logger.setLevel(logging.WARNING)
+        handler = _CompileHandler()
+        logger.addHandler(handler)
+        try:
+            yield handler
+        finally:
+            logger.removeHandler(handler)
+            logger.setLevel(prev_level)
 
 
 @dataclasses.dataclass(frozen=True)

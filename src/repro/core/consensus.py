@@ -215,10 +215,11 @@ class ConsensusEngine:
         tests).
       block_n: column-tile width of the fused kernel launches; ``None``
         (default, recommended) defers to the kernels, which resolve it at
-        trace time through ``REPRO_FASTMIX_BLOCK_N`` and then the
-        persistent autotune cache (:mod:`repro.kernels.autotune`) keyed on
-        (device kind, shape bucket, dtype) — so a tuned machine runs tuned
-        tiles with no engine change.
+        trace time through ``RuntimeConfig.fastmix_block_n``
+        (``REPRO_FASTMIX_BLOCK_N`` via :mod:`repro.runtime.config`) and
+        then the persistent autotune cache (:mod:`repro.kernels.autotune`)
+        keyed on (device kind, shape bucket, dtype) — so a tuned machine
+        runs tuned tiles with no engine change.
       wire_dtype: gossip **wire** precision — ``None`` (full precision) or
         ``"bf16"``: each round's *sent* iterate is rounded to bf16
         (halving wire bytes) while the tracking combine, the Chebyshev

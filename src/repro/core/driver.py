@@ -59,6 +59,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import telemetry
+
 from .consensus import ConsensusEngine, DynamicConsensusEngine
 from .operators import StackedOperators
 from .step import Carry, PowerStep
@@ -179,7 +181,13 @@ class IterationDriver:
                              "substrate (per-step static round counts)")
         fn = {"scan": self._run_scan, "traced_scan": self._run_traced_scan,
               "unrolled": self._run_unrolled}[substrate]
-        return fn(ops, W0, carry, T, t0, dt)
+        out = fn(ops, W0, carry, T, t0, dt)
+        # DriverRun already carries the paper's observables host-side
+        # (cumulative gossip rounds, per-iteration contraction bound) —
+        # stream them when a sink is installed.
+        telemetry.emit_iterations("driver.run", t0, out.rounds, out.rates,
+                                  substrate=substrate)
+        return out
 
     # -------------------------------------------------- streaming substrate
     def run_stream(self, ticks, W0, *, T: int, t0: int = 0,
@@ -222,6 +230,8 @@ class IterationDriver:
         """Cached jitted static-topology scan over one problem."""
         key = ("scan", T, kind)
         fn = self._run_cache.get(key)
+        telemetry.emit("launch", source="driver.run", substrate="scan",
+                       T=T, kind=kind, warm=fn is not None)
         if fn is None:
             step, eng = self.step, self.engine
             mix = step.make_mix(eng)
@@ -242,6 +252,8 @@ class IterationDriver:
         """Cached jitted dynamic-schedule scan; ``(Ls, etas)`` are traced."""
         key = ("traced_scan", T, kind)
         fn = self._run_cache.get(key)
+        telemetry.emit("launch", source="driver.run", substrate="traced_scan",
+                       T=T, kind=kind, warm=fn is not None)
         if fn is None:
             step, dyn = self.step, self.dynamic
 
@@ -374,6 +386,16 @@ class IterationDriver:
             fn = self._batch_fn(T, kind, with_history, dynamic=False)
             out = fn(arr, W0)
         (S, W, G_prev), hists = out
+        if telemetry.enabled():
+            K = step.rounds
+            if self.dynamic is not None:
+                rates = self.dynamic.contraction_rates(offs[0], T)
+            else:
+                rates = np.full(T, self.engine.contraction_rate(K),
+                                dtype=np.float32)
+            rounds = np.arange(1, T + 1, dtype=np.float32) * float(K)
+            telemetry.emit_iterations("driver.run_batch", 0, rounds, rates,
+                                      batch=B)
         if with_history:
             return BatchRun(S, W, G_prev, S_hist=hists[0], W_hist=hists[1])
         return BatchRun(S, W, G_prev)
@@ -399,6 +421,8 @@ class IterationDriver:
                   dynamic: bool):
         key = (T, kind, with_history, dynamic)
         fn = self._batch_cache.get(key)
+        telemetry.emit("launch", source="driver.run_batch", substrate="vmap",
+                       T=T, kind=kind, warm=fn is not None)
         if fn is not None:
             return fn
         step, eng, dyn = self.step, self.engine, self.dynamic

@@ -12,8 +12,10 @@ tuned machine transparently runs tuned tile sizes with **zero code or env
 changes**.  Resolution precedence (checked per lookup, in order):
 
 1. an explicit integer argument at the call site (never touched here);
-2. the kernel's env override (e.g. ``REPRO_FASTMIX_BLOCK_N``) — the
-   one-flag experiment workflow keeps working and always wins;
+2. the kernel's config override (e.g. ``RuntimeConfig.fastmix_block_n``,
+   fed by ``REPRO_FASTMIX_BLOCK_N`` through
+   :mod:`repro.runtime.config`) — the one-flag experiment workflow keeps
+   working and always wins;
 3. a cache entry for (kernel, device kind, shape bucket, dtype);
 4. the kernel's built-in default.
 
@@ -22,7 +24,8 @@ The cache is *populated* offline by the benchmark sweeps
 ``benchmarks/bench_kernels.py --record``) through :func:`measure_best`, or
 on first use when ``REPRO_AUTOTUNE=1`` opts into in-process measurement.
 Lookups never measure anything by default — library calls stay cheap and
-deterministic.
+deterministic.  Env parsing lives in :mod:`repro.runtime.config`; this
+module only sees pre-validated values.
 
 File format (``version`` guards future migrations)::
 
@@ -44,12 +47,15 @@ import tempfile
 import time
 from typing import Callable, Dict, Iterable, Optional
 
-#: Env var overriding the cache file location.
-CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+from repro.runtime import telemetry
+from repro.runtime import config as runtime_config
+
+#: Env var overriding the cache file location (owned by runtime.config).
+CACHE_ENV = runtime_config.ENV_AUTOTUNE_CACHE
 
 #: Env var enabling measure-on-first-use (off by default: library calls
-#: never time-sweep unless the user opts in).
-AUTOTUNE_ENV = "REPRO_AUTOTUNE"
+#: never time-sweep unless the user opts in; owned by runtime.config).
+AUTOTUNE_ENV = runtime_config.ENV_AUTOTUNE
 
 _VERSION = 1
 
@@ -67,10 +73,11 @@ _STAT_TTL = 1.0
 
 
 def default_cache_path() -> str:
-    """``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/autotune.json``."""
-    env = os.environ.get(CACHE_ENV)
-    if env:
-        return env
+    """``RuntimeConfig.autotune_cache`` (i.e. ``$REPRO_AUTOTUNE_CACHE``)
+    or ``~/.cache/repro/autotune.json``."""
+    configured = runtime_config.get_config().autotune_cache
+    if configured:
+        return configured
     base = os.environ.get("XDG_CACHE_HOME",
                           os.path.join(os.path.expanduser("~"), ".cache"))
     return os.path.join(base, "repro", "autotune.json")
@@ -194,36 +201,30 @@ def lookup(kernel: str, param: str, shape: Iterable[int], dtype, *,
            device: Optional[str] = None,
            path: Optional[str] = None) -> Optional[int]:
     """Cached tunable for (kernel, device, bucket, dtype), or None."""
-    entry = _entries(path).get(cache_key(kernel, shape, dtype, device=device))
-    if entry is None:
-        return None
-    val = entry.get(param)
+    key = cache_key(kernel, shape, dtype, device=device)
+    entry = _entries(path).get(key)
+    val = None if entry is None else entry.get(param)
     if isinstance(val, bool) or not isinstance(val, int) or val <= 0:
-        return None        # malformed tunable: treat as a miss, not an error
+        val = None         # malformed tunable: treat as a miss, not an error
+    if telemetry.enabled():
+        telemetry.emit("autotune", kernel=kernel, param=param, key=key,
+                       hit=val is not None, value=val)
     return val
 
 
 def resolve(kernel: str, param: str, shape: Iterable[int], dtype, *,
-            default: int, env: Optional[str] = None,
+            default: int, override: Optional[int] = None,
             path: Optional[str] = None) -> int:
-    """Full precedence chain: env override > cache entry > built-in default.
+    """Full precedence chain: explicit override > cache entry > default.
 
-    ``env`` is the kernel's env-var name (e.g. ``REPRO_FASTMIX_BLOCK_N``);
-    a set-but-invalid value raises (silently ignoring a typo'd override is
-    how benchmark campaigns go wrong).
+    ``override`` is the pre-validated config value for this knob (e.g.
+    ``RuntimeConfig.fastmix_block_n``) — env-string parsing happens in
+    :mod:`repro.runtime.config`, where a set-but-invalid value raises
+    (silently ignoring a typo'd override is how benchmark campaigns go
+    wrong).
     """
-    if env is not None:
-        raw = os.environ.get(env)
-        if raw not in (None, ""):
-            try:
-                val = int(raw)
-            except ValueError as e:
-                raise ValueError(
-                    f"{env} must be a positive integer, got {raw!r}") from e
-            if val <= 0:
-                raise ValueError(
-                    f"{env} must be a positive integer, got {raw!r}")
-            return val
+    if override is not None:
+        return int(override)
     cached = lookup(kernel, param, shape, dtype, path=path)
     if cached is not None:
         return cached
@@ -232,7 +233,7 @@ def resolve(kernel: str, param: str, shape: Iterable[int], dtype, *,
 
 def autotune_enabled() -> bool:
     """True when ``REPRO_AUTOTUNE`` opts into measure-on-first-use."""
-    return os.environ.get(AUTOTUNE_ENV, "") not in ("", "0", "false", "off")
+    return runtime_config.get_config().autotune
 
 
 def measure_best(kernel: str, param: str, shape: Iterable[int], dtype,

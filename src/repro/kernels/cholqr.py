@@ -50,18 +50,20 @@ may differ from Householder's — every algorithm call site runs Alg. 2
 from __future__ import annotations
 
 import functools
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.runtime import config as runtime_config
 
 from . import autotune
 
 #: Env var selecting the orthonormalization implementation repo-wide
 #: (read by ``core/step.qr_orth`` through :func:`qr_orth` at trace time):
 #: ``cholqr2`` (default) or ``householder`` (the pre-PR-5 jnp.linalg.qr).
-QR_IMPL_ENV = "REPRO_QR_IMPL"
+#: Owned/validated by :mod:`repro.runtime.config`.
+QR_IMPL_ENV = runtime_config.ENV_QR_IMPL
 
 #: Condition-estimate threshold (vs 1/eps) above which pass 1 re-runs on a
 #: shifted Gram.  At this margin the un-shifted pass-2 Gram is still
@@ -254,22 +256,21 @@ def cholqr2(X: jax.Array, *, use_kernel: Optional[bool] = None,
 def qr_orth(S: jax.Array, *, interpret: Optional[bool] = None) -> jax.Array:
     """Orthonormalization entry point ``core/step.qr_orth`` routes through.
 
-    Implementation resolution (at trace time, like every env knob here):
+    Implementation resolution (at trace time, like every config knob here):
 
-    1. ``REPRO_QR_IMPL`` (``cholqr2`` / ``householder``) — explicit wins;
+    1. ``RuntimeConfig.qr_impl`` (``REPRO_QR_IMPL``: ``cholqr2`` /
+       ``householder``, validated by :mod:`repro.runtime.config`) —
+       explicit wins;
     2. the autotune cache: a recorded ``{"householder": 1}`` for this
        (device kind, ``(d, k)`` bucket, dtype) pins the bucket back to
        ``jnp.linalg.qr`` — ``bench_kernels.py --record`` measures and
        records the per-shape winner;
     3. default: CholeskyQR2.
     """
-    impl = os.environ.get(QR_IMPL_ENV)
+    impl = runtime_config.get_config().qr_impl
     if impl is None:
         hh = autotune.lookup("cholqr", "householder", S.shape[-2:], S.dtype)
         impl = "householder" if hh == 1 else "cholqr2"
     if impl == "householder":
         return jnp.linalg.qr(S)[0]
-    if impl != "cholqr2":
-        raise ValueError(
-            f"{QR_IMPL_ENV} must be 'cholqr2' or 'householder', got {impl!r}")
     return cholqr2(S, interpret=interpret)

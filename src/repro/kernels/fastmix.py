@@ -44,10 +44,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.runtime import config as runtime_config
+
 from . import autotune
 
 #: Env var overriding the fused kernels' column-tile width (``block_n``).
-BLOCK_N_ENV = "REPRO_FASTMIX_BLOCK_N"
+#: Owned/validated by :mod:`repro.runtime.config`.
+BLOCK_N_ENV = runtime_config.ENV_FASTMIX_BLOCK_N
 
 #: Built-in column-tile width when neither the env override nor an
 #: autotune-cache entry decides.  512 fp32 lanes x a 128-padded agent axis
@@ -61,8 +64,9 @@ def default_block_n(shape=None, dtype=jnp.float32) -> int:
     """The fused kernels' column-tile width for ``shape``.
 
     Resolution precedence (PR-5 autotuner contract, shared by every
-    kernel): the ``REPRO_FASTMIX_BLOCK_N`` env override, then the
-    persistent autotune-cache entry for
+    kernel): the ``RuntimeConfig.fastmix_block_n`` override
+    (``REPRO_FASTMIX_BLOCK_N``, validated by :mod:`repro.runtime.config`),
+    then the persistent autotune-cache entry for
     ``(fastmix, device kind, shape bucket, dtype)`` when ``shape`` (the
     kernel-facing ``(m, columns)``) is given, then
     :data:`DEFAULT_BLOCK_N`.  The kernels consult this through their
@@ -72,7 +76,9 @@ def default_block_n(shape=None, dtype=jnp.float32) -> int:
     """
     return autotune.resolve("fastmix", "block_n",
                             shape if shape is not None else (),
-                            dtype, env=BLOCK_N_ENV,
+                            dtype,
+                            override=runtime_config.get_config()
+                            .fastmix_block_n,
                             default=DEFAULT_BLOCK_N)
 
 

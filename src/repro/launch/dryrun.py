@@ -1,7 +1,9 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# NOTE: the two lines above MUST run before any jax import — jax locks the
-# device count at first backend init.  Do not move or reorder.
+from repro.runtime.config import configure
+configure(host_device_count=512)
+# NOTE: the two lines above MUST run before jax's first backend init —
+# jax locks the device count then.  ``configure`` *appends* the
+# device-count flag to XLA_FLAGS (a user-set count wins); it never
+# clobbers other user flags.  Do not move or reorder.
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -20,6 +22,7 @@ Usage::
 """
 import argparse
 import json
+import os
 import time
 import traceback
 from typing import Any, Dict, Optional

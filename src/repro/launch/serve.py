@@ -214,13 +214,30 @@ def main() -> None:
                     help="admission policy: batch-size cap")
     ap.add_argument("--max-wait", type=float, default=0.01,
                     help="admission policy: max queue wait (s)")
+    ap.add_argument("--telemetry", default=None, metavar="SPEC",
+                    help="event sink: 'null', 'log', or 'jsonl:PATH' "
+                         "(default: $REPRO_TELEMETRY if set); streams "
+                         "per-iteration contraction rate/comm rounds, "
+                         "warm-vs-cold launches, drift/restart events")
     args = ap.parse_args()
-    if args.workload == "pca":
-        serve_pca(args)
-    elif args.workload == "pca-stream":
-        serve_pca_stream(args)
-    else:
-        serve_lm(args)
+
+    from repro.runtime import config as runtime_config
+    from repro.runtime import telemetry
+    spec = args.telemetry if args.telemetry is not None \
+        else runtime_config.get_config().telemetry
+    sink = telemetry.sink_from_spec(spec)
+    telemetry.set_sink(sink)
+    telemetry.emit("config", workload=args.workload,
+                   **runtime_config.describe())
+    try:
+        if args.workload == "pca":
+            serve_pca(args)
+        elif args.workload == "pca-stream":
+            serve_pca_stream(args)
+        else:
+            serve_lm(args)
+    finally:
+        sink.close()
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
+from . import config, telemetry
+from .config import RuntimeConfig, configure, get_config, override
 from .fault_tolerance import (AgentFailure, DisconnectedTopologyError,
                               ResilientLoop, StragglerMonitor,
                               deepca_with_failures, degrade_topology,

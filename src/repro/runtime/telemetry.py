@@ -1,0 +1,232 @@
+"""Pluggable runtime telemetry: per-iteration observables as live events.
+
+DeEPCA's headline claims are observable quantities — communication rounds
+per power iteration, the per-iteration contraction rate, warm-vs-cold
+launch behaviour — and this module streams them as they happen instead of
+reconstructing them post-hoc from bench scripts.  The design is a single
+process-global sink (installed via :func:`set_sink` or a
+``--telemetry``/``REPRO_TELEMETRY`` spec) that instrumented layers write
+through :func:`emit`; with the default :class:`NullSink` installed,
+:func:`enabled` is a single attribute read and the hot paths pay nothing.
+
+Event vocabulary (every payload is JSON-serializable scalars):
+
+==================  =====================================================
+event               fields
+==================  =====================================================
+``config``          :meth:`RuntimeConfig.describe` snapshot at startup
+``iteration``       ``source`` ('driver.run'|'driver.run_batch'), ``t``
+                    (global iteration index), ``rounds`` (cumulative
+                    gossip rounds in the window), ``rate`` (per-iteration
+                    contraction bound); batch runs add ``batch``
+``launch``          ``source``, ``substrate``/``kind``, ``T``, ``warm``
+                    (program-cache hit vs fresh trace)
+``service.launch``  ``bucket``, ``batch``, ``batch_padded``, ``warm``
+                    (from :class:`repro.streaming.service.PCAService`)
+``stream.tick``     ``tick``, ``iterations``, ``comm_rounds``, ``stat``,
+                    ``jump_stat``, ``drift``, ``restarted``,
+                    ``escalations``
+``stream.restart``  ``tick``, ``jump_stat`` — tracker threw its warm
+                    state away
+``stream.escalation``  ``tick``, ``escalation`` (1-based count),
+                    ``stat`` — drift policy demanded extra iterations
+``autotune``        ``kernel``, ``param``, ``key``, ``hit``, ``value``
+==================  =====================================================
+
+Sinks: :class:`NullSink` (default, free), :class:`LoggingSink` (stdlib
+logging), :class:`JsonlSink` (one JSON object per line, thread-safe,
+flushed per event), :class:`CallbackSink` (the wandb-style hook seam —
+hand it ``wandb.log``-shaped callables), :class:`RecordingSink` (in-memory,
+for tests; see also :func:`capture`).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import logging
+import os
+import threading
+import time
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    TextIO, Tuple)
+
+
+class TelemetrySink:
+    """Sink protocol: subclass and implement :meth:`emit`.
+
+    ``active=False`` (only :class:`NullSink`) short-circuits
+    :func:`enabled` so instrumented hot paths skip field assembly.
+    """
+
+    active: bool = True
+
+    def emit(self, event: str, fields: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class NullSink(TelemetrySink):
+    """Discards everything; the default."""
+
+    active = False
+
+    def emit(self, event: str, fields: Dict[str, Any]) -> None:
+        pass
+
+
+class LoggingSink(TelemetrySink):
+    """Events as stdlib-logging records on ``repro.telemetry``."""
+
+    def __init__(self, logger: Optional[logging.Logger] = None,
+                 level: int = logging.INFO):
+        self.logger = logger or logging.getLogger("repro.telemetry")
+        self.level = level
+
+    def emit(self, event: str, fields: Dict[str, Any]) -> None:
+        kv = " ".join(f"{k}={fields[k]}" for k in sorted(fields))
+        self.logger.log(self.level, "%s %s", event, kv)
+
+
+def _jsonable(obj: Any) -> Any:
+    """json.dumps fallback: numpy scalars/arrays -> python, else repr."""
+    if hasattr(obj, "item") and getattr(obj, "ndim", None) == 0:
+        return obj.item()
+    if hasattr(obj, "tolist"):
+        return obj.tolist()
+    return repr(obj)
+
+
+class JsonlSink(TelemetrySink):
+    """One JSON object per line: ``{"event", "seq", "ts", **fields}``.
+
+    The file opens lazily in append mode, writes are lock-serialized and
+    flushed per event, so a crashed run keeps every emitted record and a
+    tail-reader sees events live.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        self._file: Optional[TextIO] = None
+        self._seq = 0
+
+    def emit(self, event: str, fields: Dict[str, Any]) -> None:
+        with self._lock:
+            if self._file is None:
+                parent = os.path.dirname(self.path)
+                if parent:
+                    os.makedirs(parent, exist_ok=True)
+                self._file = open(self.path, "a", encoding="utf-8")
+            rec: Dict[str, Any] = {"event": event, "seq": self._seq,
+                                   "ts": time.time()}
+            rec.update(fields)
+            self._seq += 1
+            self._file.write(json.dumps(rec, default=_jsonable) + "\n")
+            self._file.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._file is not None:
+                self._file.close()
+                self._file = None
+
+
+class CallbackSink(TelemetrySink):
+    """wandb-style hook seam: forwards each event to ``fn(event, fields)``.
+
+    ``CallbackSink(lambda event, fields: wandb.log(fields))`` is the
+    whole integration.
+    """
+
+    def __init__(self, fn: Callable[[str, Dict[str, Any]], None]):
+        self.fn = fn
+
+    def emit(self, event: str, fields: Dict[str, Any]) -> None:
+        self.fn(event, dict(fields))
+
+
+class RecordingSink(TelemetrySink):
+    """In-memory capture for tests."""
+
+    def __init__(self) -> None:
+        self.events: List[Tuple[str, Dict[str, Any]]] = []
+
+    def emit(self, event: str, fields: Dict[str, Any]) -> None:
+        self.events.append((event, dict(fields)))
+
+    def of(self, event: str) -> List[Dict[str, Any]]:
+        return [fields for name, fields in self.events if name == event]
+
+
+# --------------------------------------------------------- global sink
+_SINK: TelemetrySink = NullSink()
+
+
+def get_sink() -> TelemetrySink:
+    return _SINK
+
+
+def set_sink(sink: Optional[TelemetrySink]) -> TelemetrySink:
+    """Install ``sink`` (``None`` -> :class:`NullSink`); returns the
+    previous sink so callers can restore it."""
+    global _SINK
+    prev = _SINK
+    _SINK = sink if sink is not None else NullSink()
+    return prev
+
+
+def enabled() -> bool:
+    """Cheap hot-path guard: is a real sink installed?"""
+    return _SINK.active
+
+
+def emit(event: str, **fields: Any) -> None:
+    if _SINK.active:
+        _SINK.emit(event, fields)
+
+
+@contextlib.contextmanager
+def capture() -> Iterator[RecordingSink]:
+    """Scoped :class:`RecordingSink` installation (tests)."""
+    sink = RecordingSink()
+    prev = set_sink(sink)
+    try:
+        yield sink
+    finally:
+        set_sink(prev)
+
+
+def sink_from_spec(spec: Optional[str]) -> TelemetrySink:
+    """Parse a sink spec: ``null``/``none``/``off``, ``log``, or
+    ``jsonl:PATH`` (the ``--telemetry`` flag / ``REPRO_TELEMETRY`` format).
+    """
+    if spec is None:
+        return NullSink()
+    text = str(spec).strip()
+    low = text.lower()
+    if low in ("", "null", "none", "off"):
+        return NullSink()
+    if low in ("log", "logging"):
+        return LoggingSink()
+    if low.startswith("jsonl:"):
+        path = text[len("jsonl:"):]
+        if not path:
+            raise ValueError("jsonl telemetry sink needs a path: 'jsonl:PATH'")
+        return JsonlSink(path)
+    raise ValueError(f"unknown telemetry sink spec {spec!r}; expected "
+                     "'null', 'log', or 'jsonl:PATH'")
+
+
+# ------------------------------------------------------ emission helpers
+def emit_iterations(source: str, t0: int, rounds: Sequence[int],
+                    rates: Sequence[float], **extra: Any) -> None:
+    """One ``iteration`` event per window entry.  ``rounds`` is the
+    window-cumulative gossip-round counter (as carried by ``DriverRun``),
+    ``rates`` the per-iteration contraction bound."""
+    if not _SINK.active:
+        return
+    for i, (r, rate) in enumerate(zip(rounds, rates)):
+        emit("iteration", source=source, t=int(t0) + i, rounds=int(r),
+             rate=float(rate), **extra)

@@ -49,6 +49,7 @@ from repro.core.driver import IterationDriver
 from repro.core.operators import StackedOperators
 from repro.core.step import PowerStep
 from repro.core.topology import Topology
+from repro.runtime import telemetry
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -248,10 +249,12 @@ class PCAService:
         problems = [ops for ops, _ in padded]
         W0 = jnp.stack([w for _, w in padded])
         sig = (key, B_pad)
-        self.stats["cold_launches" if sig not in self._signatures
-                   else "warm_launches"] += 1
+        warm = sig in self._signatures
+        self.stats["warm_launches" if warm else "cold_launches"] += 1
         self._signatures.add(sig)
         self.stats["batches"] += 1
+        telemetry.emit("service.launch", bucket=str(key), batch=B,
+                       batch_padded=B_pad, warm=warm)
         out = self.driver.run_batch(problems, W0, T=self.T)
         for b, p in enumerate(q):
             k = p.W0.shape[1]

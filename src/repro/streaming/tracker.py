@@ -48,6 +48,7 @@ from repro.core.operators import StackedOperators
 from repro.core.schedule import TopologySchedule
 from repro.core.step import PowerStep
 from repro.core.topology import Topology
+from repro.runtime import telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,6 +251,8 @@ class StreamingDeEPCA:
             # warm W) through the fault-tolerance path, then re-run the
             # tick's window on the rebased state
             self._restart(ops)
+            telemetry.emit("stream.restart", tick=self._ticks,
+                           jump_stat=float(jump_stat))
             traces.append(self._window(ops, self.W0, U, self.T_tick))
             stat = self._stat(traces[-1], U)
             restarted = True
@@ -263,6 +266,8 @@ class StreamingDeEPCA:
             traces.append(self._window(ops, self.W0, U, esc_T))
             stat = self._stat(traces[-1], U)
             escalations += 1
+            telemetry.emit("stream.escalation", tick=self._ticks,
+                           escalation=escalations, stat=float(stat))
 
         # the EWMA tracks the quiet-period first-window level.  Tick 0's
         # first window is a cold-start artifact, not a drift level — skip
@@ -287,6 +292,13 @@ class StreamingDeEPCA:
             total_rounds=self._rounds, stat=stat, jump_stat=jump_stat,
             drift=bool(drift), restarted=restarted, escalations=escalations,
             trace=concat_traces(traces))
+        telemetry.emit("stream.tick", tick=report.tick,
+                       iterations=report.iterations,
+                       comm_rounds=float(report.comm_rounds),
+                       stat=float(report.stat),
+                       jump_stat=float(report.jump_stat),
+                       drift=report.drift, restarted=report.restarted,
+                       escalations=report.escalations)
         self.reports.append(report)
         self._ticks += 1
         return report

@@ -28,10 +28,14 @@ import types
 # machine-global tuning state (e.g. a per-bucket `householder` pin) into the
 # suite and silently change test numerics.  Point the whole session at a
 # throwaway path unless the caller explicitly pinned one; individual tests
-# (tests/test_autotune.py) still override per-test via monkeypatch.
-if "REPRO_AUTOTUNE_CACHE" not in os.environ:
-    os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
-        tempfile.mkdtemp(prefix="repro-test-autotune-"), "autotune.json")
+# (tests/test_autotune.py) still override per-test via monkeypatch.  This
+# goes through `configure()` (the env write stays in os.environ so
+# subprocess-spawning tests inherit it).
+from repro.runtime.config import ENV_AUTOTUNE_CACHE, configure  # noqa: E402
+
+if ENV_AUTOTUNE_CACHE not in os.environ:
+    configure(autotune_cache=os.path.join(
+        tempfile.mkdtemp(prefix="repro-test-autotune-"), "autotune.json"))
 
 try:
     import hypothesis  # noqa: F401  (real library present: nothing to do)

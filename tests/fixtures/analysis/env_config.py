@@ -1,0 +1,25 @@
+"""Fixture: direct REPRO_* env access + jax.config mutation (env-config).
+
+Every function here must trip the env-config lint pass — knob access
+outside repro/runtime/config.py bypasses the typed RuntimeConfig surface.
+NOT importable production code; exists only as analyzer test input.
+"""
+import os
+
+import jax
+
+
+def sneaky_env_read():
+    return os.environ.get("REPRO_SECRET_KNOB", "")
+
+
+def sneaky_getenv():
+    return os.getenv("REPRO_SECRET_KNOB")
+
+
+def sneaky_env_write():
+    os.environ["REPRO_SECRET_KNOB"] = "1"
+
+
+def sneaky_jax_mutation():
+    jax.config.update("jax_enable_x64", True)

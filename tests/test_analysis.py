@@ -55,6 +55,7 @@ def test_lint_clean_on_repo_tree():
     ("direct_qr.py", "duplicate-compute-site", "qr"),
     ("bare_assert.py", "bare-assert", "assert"),
     ("host_sync.py", "host-sync", "item"),
+    ("env_config.py", "env-config", "REPRO_"),
 ])
 def test_lint_fires_on_fixture(fixture, code, needle):
     r = lint.run(files=[_fixture(fixture)])
@@ -73,6 +74,25 @@ def test_lint_flags_wire_roundtrip_fixture():
     r = lint.run(files=[_fixture("direct_qr.py")])
     assert any("quantize-wire" in v.message
                for v in r.violations), r.render()
+
+
+def test_env_config_lint_covers_every_access_shape():
+    """The fixture exercises get/getenv/subscript-write/jax.config.update;
+    each one must fire individually."""
+    r = lint.run(files=[_fixture("env_config.py")])
+    hits = [v for v in r.violations if v.code == "env-config"]
+    assert len(hits) == 4, r.render()
+    assert any("jax.config.update" in v.message for v in hits), r.render()
+    assert any("os.environ[" in v.message for v in hits), r.render()
+
+
+def test_env_config_lint_allows_the_config_owner():
+    """repro/runtime/config.py is the registered owner — repo-mode lint
+    over the real tree must stay clean (the refactor's no-backslide
+    guarantee, also the ISSUE-7 acceptance grep)."""
+    r = lint.run()
+    assert not [v for v in r.violations if v.code == "env-config"], \
+        r.render()
 
 
 def test_lint_missing_definition_guard(tmp_path):
@@ -295,4 +315,4 @@ def test_fixture_files_are_committed():
     names = {os.path.basename(p)
              for p in glob.glob(os.path.join(FIXTURES, "*.py"))}
     assert {"dup_tracking_site.py", "direct_qr.py", "bare_assert.py",
-            "host_sync.py"} <= names
+            "host_sync.py", "env_config.py"} <= names

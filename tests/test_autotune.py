@@ -60,26 +60,32 @@ def test_resolve_default_on_miss(cache):
                             default=128) == 128
 
 
-# -------------------------------------------------- env-override precedence
-def test_env_beats_cached_entry(cache, monkeypatch):
+# ----------------------------------------------- config-override precedence
+def test_config_override_beats_cached_entry(cache, monkeypatch):
+    from repro.runtime import config as runtime_config
+
     autotune.record("fastmix", (16, 8192), jnp.float32, {"block_n": 1024})
     monkeypatch.setenv("REPRO_FASTMIX_BLOCK_N", "256")
+    block = runtime_config.get_config().fastmix_block_n
+    assert block == 256
     assert autotune.resolve("fastmix", "block_n", (16, 8192), jnp.float32,
-                            env="REPRO_FASTMIX_BLOCK_N", default=512) == 256
+                            override=block, default=512) == 256
     monkeypatch.delenv("REPRO_FASTMIX_BLOCK_N")
+    block = runtime_config.get_config().fastmix_block_n
+    assert block is None
     assert autotune.resolve("fastmix", "block_n", (16, 8192), jnp.float32,
-                            env="REPRO_FASTMIX_BLOCK_N", default=512) == 1024
+                            override=block, default=512) == 1024
 
 
 def test_invalid_env_raises_not_silently_ignored(cache, monkeypatch):
+    from repro.runtime import config as runtime_config
+
     monkeypatch.setenv("REPRO_FASTMIX_BLOCK_N", "not-a-number")
     with pytest.raises(ValueError, match="positive integer"):
-        autotune.resolve("fastmix", "block_n", (16, 8192), jnp.float32,
-                         env="REPRO_FASTMIX_BLOCK_N", default=512)
+        runtime_config.get_config()
     monkeypatch.setenv("REPRO_FASTMIX_BLOCK_N", "0")
     with pytest.raises(ValueError, match="positive integer"):
-        autotune.resolve("fastmix", "block_n", (16, 8192), jnp.float32,
-                         env="REPRO_FASTMIX_BLOCK_N", default=512)
+        runtime_config.get_config()
 
 
 def test_fastmix_default_block_n_consults_cache(cache, monkeypatch):
