@@ -36,6 +36,31 @@ T = 100
 QUICK_T = 30
 TOP_K = 5
 
+#: Wire-precision x acceleration sweep (PR-8): one K, the paper datasets.
+#: Each entry is (config name, deepca kwargs).  'fp32' is the envelope and
+#: iteration baseline the other rows are judged against.
+WIRE_ACCEL_CONFIGS = (
+    ("fp32", {}),
+    ("bf16", {"wire_dtype": "bf16"}),
+    ("int8_ef", {"wire_dtype": "int8"}),
+    ("accel", {"accelerated": True}),
+    ("accel_int8_ef", {"wire_dtype": "int8", "accelerated": True}),
+    ("accel_fp8_ef", {"wire_dtype": "fp8", "accelerated": True}),
+)
+WIRE_K = 8
+#: tan-theta target the `iters_to_target` column counts down to — deep
+#: enough that momentum's faster asymptotic rate dominates its first-few-
+#: iteration transient (at 1e-10 the accelerated runs cross ~20-30%
+#: earlier on both paper grids; at 1e-5 they'd still be paying the
+#: transient), while staying inside what the fp32 wire reaches within T.
+#: bf16 (~1e-2 floor) and fp8 (~1e-7..1e-8 companded floor) report -1
+#: here by design — the column is the int8-EF/momentum separator.
+WIRE_TAN_TARGET = 1e-10
+#: The quick grid's T=30 horizon floors fp32 itself at ~2e-5, so the
+#: smoke target sits just above that; accel/int8 must tie fp32 here
+#: (asserted by CI), not beat it — the transient dominates at T=30.
+QUICK_WIRE_TAN_TARGET = 1e-4
+
 
 def _time_fn(fn, *args, reps=3):
     import jax
@@ -74,6 +99,49 @@ def stage_rows(name: str, ops, topo, W0, K: int, writer, json_rows) -> None:
         row = {"name": f"{name}/stage/{stage}", "us": round(dt * 1e6, 1)}
         json_rows.append(row)
         writer.writerow([row["name"], f"{dt * 1e6:.1f}", ""])
+
+
+def wire_accel_rows(name: str, ops, topo, W0, U, writer, json_rows, *,
+                    T_run: int, target: float) -> None:
+    """Accelerated-iterations x quantized-wire grid at K=WIRE_K.
+
+    Reports, per config: the final tan-theta (the accuracy envelope),
+    ``bytes_per_round`` per agent (gated one-sided by bench_diff — any
+    increase regresses), and ``iters_to_target`` — the first power
+    iteration at which mean tan-theta crosses ``target`` (-1 = never).
+    The claims the committed rows substantiate: int8-EF matches the fp32
+    accuracy envelope at ~1/4 the bytes (breaking plain-bf16's ~1e-2
+    floor at half bf16's bytes), companded fp8-EF lands below the
+    bench_diff accuracy-gate floor at exactly 1/4 the bytes, and momentum
+    reaches the deep target in fewer iterations than the unaccelerated
+    fp32 baseline.
+    """
+    from repro.core import ConsensusEngine
+
+    d = W0.shape[0]
+    for cfg_name, kw in WIRE_ACCEL_CONFIGS:
+        t0 = time.perf_counter()
+        res = deepca(ops, topo, W0, k=TOP_K, T=T_run, K=WIRE_K, U=U, **kw)
+        dt = time.perf_counter() - t0
+        tr = res.trace
+        tans = np.asarray(tr.mean_tan_theta)
+        hit = np.nonzero(tans <= target)[0]
+        iters_to_target = int(hit[0]) + 1 if hit.size else -1
+        eng = ConsensusEngine.for_algorithm(
+            "deepca", topo, K=WIRE_K, backend="stacked",
+            wire_dtype=kw.get("wire_dtype"))
+        row = {"name": f"{name}/wire/{cfg_name}/K{WIRE_K}",
+               "us": round(dt * 1e6 / T_run, 1),
+               "final_tan": float(tans[-1]),
+               "rounds": float(tr.comm_rounds[-1]),
+               "bytes_per_round": eng.bytes_per_round(d, TOP_K),
+               "iters_to_target": iters_to_target,
+               "target": target}
+        json_rows.append(row)
+        writer.writerow([row["name"], f"{dt * 1e6 / T_run:.1f}",
+                         f"final_tan={row['final_tan']:.3e};"
+                         f"bytes_per_round={row['bytes_per_round']};"
+                         f"iters_to_target={iters_to_target}"])
 
 
 def run_dataset(name: str, spec: dict, writer, json_rows, *,
@@ -121,6 +189,10 @@ def run_dataset(name: str, spec: dict, writer, json_rows, *,
                       "us": round(cen_t * 1e6 / T_run, 1),
                       "final_tan": float(cen["tan_theta"][-1])})
     stage_rows(name, ops, topo, W0, max(k_sweep), writer, json_rows)
+    wire_accel_rows(name, ops, topo, W0, U, writer, json_rows,
+                    T_run=T_run,
+                    target=(QUICK_WIRE_TAN_TARGET if T_run < T
+                            else WIRE_TAN_TARGET))
     return {"cen": cen, "rows": rows, "topo": topo, "name": name}
 
 

@@ -25,6 +25,10 @@ judged by class:
   widening the goalposts must not sneak past the diff;
 * **``rounds``**: exact — the communication-round count is determined by
   (T, K); a drift means the algorithm changed, not the machine.
+* **wire bytes** (``bytes_per_round``): strict one-sided — any increase
+  is a regression (the byte count is a deterministic function of the
+  wire dtype and shape, so even +1 byte means the wire contract
+  changed); a decrease is an improvement.
 
 ``speedup`` columns are ignored (a ratio of two wall-clocks double-counts
 timing noise), and so are the reference-baseline timings (``ref_us``,
@@ -49,6 +53,8 @@ WALLCLOCK_KEYS = ("us",)
 ACCURACY_KEYS = ("parity", "orth", "subspace_vs_qr", "final_tan",
                  "max_abs_diff")
 EXACT_KEYS = ("rounds",)
+#: Deterministic byte counts: any increase regresses, any decrease improves.
+BYTES_KEYS = ("bytes_per_round",)
 
 #: Wall-clock ratio gate: candidate/baseline above this fails.
 DEFAULT_US_RATIO = 2.5
@@ -151,6 +157,19 @@ def diff(baseline: Dict[str, Any], candidate: Dict[str, Any], *,
                 regressions.append(
                     f"{name}: {key} changed {a[key]:g} -> {b[key]:g} "
                     "(must match exactly)")
+
+        for key in BYTES_KEYS:
+            if key not in a or key not in b:
+                continue
+            va, vb = float(a[key]), float(b[key])
+            if vb > va:
+                regressions.append(
+                    f"{name}: {key} grew {va:g} -> {vb:g} B "
+                    "(wire bytes are deterministic; any increase is a "
+                    "contract change)")
+            elif vb < va:
+                improvements.append(
+                    f"{name}: {key} {va:g} -> {vb:g} B")
 
     if compared == 0:
         regressions.append(

@@ -72,6 +72,7 @@ COMPUTE_SITES: Tuple[ComputeSite, ...] = (
             # in-kernel mirrors: the combine runs on VMEM-resident tiles
             # inside the fused launches and cannot call out to jnp helpers
             ("repro/kernels/fastmix.py", "_fastmix_track_kernel"),
+            ("repro/kernels/fastmix.py", "_fastmix_track_ef_kernel"),
             ("repro/kernels/fastmix.py", "_apply_track_kernel"),
         }),
         doc="Eqn. (3.1) subspace tracking `S + G - G_prev` must route "
@@ -98,14 +99,34 @@ COMPUTE_SITES: Tuple[ComputeSite, ...] = (
         definition=("repro/kernels/fastmix.py", "quantize_wire"),
         allowed=frozenset({
             ("repro/kernels/fastmix.py", "quantize_wire"),
-            # in-kernel mirrors of the bf16 send rounding
+            ("repro/kernels/fastmix.py", "ef_quantize"),
+            # in-kernel mirrors of the wire send rounding
             ("repro/kernels/fastmix.py", "_rounds"),
+            ("repro/kernels/fastmix.py", "_rounds_ef"),
             ("repro/kernels/fastmix.py", "_apply_track_kernel"),
         }),
-        doc="bf16 wire rounding must route through "
+        doc="wire rounding (bf16/int8/fp8) must route through "
             "repro.kernels.fastmix.quantize_wire (or its registered "
             "in-kernel mirrors) so every wire path shares one rounding "
             "rule and the fp32-accumulation contract stays checkable",
+    ),
+    ComputeSite(
+        name="ef-transmit",
+        pattern="def",
+        definition=("repro/compression/ef.py", "ef_transmit"),
+        allowed=frozenset({
+            ("repro/compression/ef.py", "ef_transmit"),
+            # the gossip hot loop inlines the same identity on VMEM tiles
+            ("repro/kernels/fastmix.py", "ef_quantize"),
+            ("repro/kernels/fastmix.py", "_rounds_ef"),
+            ("repro/kernels/fastmix.py", "_fastmix_ef_kernel"),
+            ("repro/kernels/fastmix.py", "_fastmix_track_ef_kernel"),
+        }),
+        doc="error-feedback transmit (y = x + err; sent = Q(y); "
+            "err' = (y - sent) * decay) must route through "
+            "repro.compression.ef.ef_transmit or the registered gossip "
+            "mirrors (fastmix.ef_quantize and the fused kernels) so the "
+            "residual update rule has one auditable definition",
     ),
     ComputeSite(
         name="rebase-carry",
@@ -126,6 +147,8 @@ COMPUTE_SITES: Tuple[ComputeSite, ...] = (
 RESERVED_DEFS = {
     "tracking_update": ("repro/kernels/fastmix.py",),
     "quantize_wire": ("repro/kernels/fastmix.py",),
+    "ef_quantize": ("repro/kernels/fastmix.py",),
+    "ef_transmit": ("repro/compression/ef.py",),
     "rebase_carry": ("repro/core/step.py",),
     "qr_orth": ("repro/core/step.py", "repro/kernels/cholqr.py"),
     # kernels/ops.py holds the public delegating wrapper (same seam)

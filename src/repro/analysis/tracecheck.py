@@ -11,16 +11,19 @@ bodies) to verify two contracts:
   paper-fidelity runs chase <1e-8 targets and a single silent f32 hop
   (e.g. routing an f64 iterate through the fp32 Pallas kernel) caps the
   whole run at ~1e-6.
-* **bf16 wire accumulation** (:func:`check_wire`): on every
-  ``wire_dtype="bf16"`` path the *only* consumers allowed to keep values
-  in sub-fp32 precision are the quantize casts themselves; any equation
-  that reads bf16 and writes bf16/f16 (accumulating in the wire dtype)
-  breaks the noisy-power-method error bound the wire mode's license rests
-  on.  The check also requires at least one bf16 cast to exist — a wire
-  flag that quantizes nothing is a silently-dead contract.
+* **wire accumulation** (:func:`check_wire`): on every wire-precision
+  path (``wire_dtype`` bf16 / int8 / fp8) the *only* consumers allowed
+  to touch the wire dtype are the quantize/dequantize casts themselves;
+  any equation that reads the wire dtype and writes a sub-fp32 float
+  (accumulating in or near wire precision) breaks the noisy-power-method
+  error bound the wire mode's license rests on.  The check also requires
+  at least one cast *to* the wire dtype to exist — a wire flag that
+  quantizes nothing is a silently-dead contract.  EF modes are audited
+  through the engines' ``ef=`` API with a zero residual.
 
 Entry points are registered in :data:`TRACE_SPECS`; each spec is traced
-with tiny shapes (seconds, no device execution).
+with tiny shapes (seconds, no device execution).  Wire modes are spelled
+``"wire"`` (bf16) or ``"wire:int8"`` / ``"wire:fp8"``.
 """
 from __future__ import annotations
 
@@ -50,7 +53,7 @@ def _subjaxprs(v) -> Iterator[object]:
             yield from _subjaxprs(item)
 
 
-def _float_dtypes(vars_, *, literals: bool = False):
+def _dtypes(vars_, *, literals: bool = False):
     import jax
     import jax.numpy as jnp
     out = []
@@ -59,9 +62,15 @@ def _float_dtypes(vars_, *, literals: bool = False):
             continue
         aval = getattr(var, "aval", None)
         dt = getattr(aval, "dtype", None)
-        if dt is not None and jnp.issubdtype(dt, jnp.floating):
+        if dt is not None:
             out.append(jnp.dtype(dt))
     return out
+
+
+def _float_dtypes(vars_, *, literals: bool = False):
+    import jax.numpy as jnp
+    return [dt for dt in _dtypes(vars_, literals=literals)
+            if jnp.issubdtype(dt, jnp.floating)]
 
 
 def audit_f64(jaxpr) -> List[str]:
@@ -80,29 +89,43 @@ def audit_f64(jaxpr) -> List[str]:
     return bad
 
 
-def audit_wire(jaxpr) -> List[str]:
-    """bf16-accumulation violations in a wire-mode jaxpr (plus a no-op
-    check: the trace must actually contain a bf16 quantize cast)."""
+#: Wire-mode name -> the jnp dtype that travels on the wire.
+def _wire_np_dtype(wire: str):
     import jax.numpy as jnp
     import numpy as np
-    bf16 = np.dtype(jnp.bfloat16)
+    return np.dtype({"bf16": jnp.bfloat16, "int8": jnp.int8,
+                     "fp8": jnp.float8_e4m3fn}[wire])
+
+
+def audit_wire(jaxpr, wire: str = "bf16") -> List[str]:
+    """Wire-accumulation violations in a wire-mode jaxpr (plus a no-op
+    check: the trace must actually contain a cast *to* the wire dtype).
+
+    An equation that consumes the wire dtype and produces a sub-fp32
+    *float* accumulates in (or near) wire precision — only the
+    quantize/dequantize ``convert_element_type`` casts may touch it.
+    Pure-layout ops on the quantized payload (reshape/broadcast keeping
+    the wire dtype) are not accumulation and pass.
+    """
+    wire_dt = _wire_np_dtype(wire)
     bad, n_quantize = [], 0
     for eqn in _walk(jaxpr):
-        outs = _float_dtypes(eqn.outvars, literals=True)
         if eqn.primitive.name == "convert_element_type":
-            if any(dt == bf16 for dt in outs):
+            if any(dt == wire_dt
+                   for dt in _dtypes(eqn.outvars, literals=True)):
                 n_quantize += 1
             continue        # the quantize/dequantize casts themselves
-        ins = _float_dtypes(eqn.invars)
-        if not any(dt == bf16 for dt in ins):
+        ins = _dtypes(eqn.invars)
+        if not any(dt == wire_dt for dt in ins):
             continue
-        narrow = [dt for dt in outs if dt.itemsize < 4]
+        narrow = [dt for dt in _float_dtypes(eqn.outvars, literals=True)
+                  if dt.itemsize < 4]
         if narrow:
             bad.append(
-                f"{eqn.primitive.name}: accumulates bf16 operand in "
+                f"{eqn.primitive.name}: accumulates {wire} operand in "
                 f"{'/'.join(d.name for d in narrow)} (needs fp32+)")
     if n_quantize == 0:
-        bad.append("wire mode traced but no bf16 quantize cast found — "
+        bad.append(f"wire mode traced but no {wire} quantize cast found — "
                    "the wire_dtype flag is a no-op on this path")
     return bad
 
@@ -305,6 +328,61 @@ def _build_fastmix_wire(dtype):
     return (lambda s, l: fastmix_wire(s, l, 0.5, 3)), (S, L)
 
 
+# EF-wire builders: the engines' ef= API with a zero residual (the state a
+# fresh carry starts from); [0] keeps only the mixed iterate so the audit
+# sees exactly what a driver step consumes.
+def _build_engine_mix_ef(backend, wire, interpret=None):
+    def build(dtype):
+        import jax.numpy as jnp
+        eng = _engine(dtype, backend, wire, interpret)
+        ops, W0 = _problem(dtype)
+        S = _carry(ops, W0)[0]
+        return (lambda s, e: eng.mix(s, ef=e)[0]), (S, jnp.zeros_like(S))
+    return build
+
+
+def _build_engine_mix_track_ef(backend, wire, interpret=None):
+    def build(dtype):
+        import jax.numpy as jnp
+        eng = _engine(dtype, backend, wire, interpret)
+        ops, W0 = _problem(dtype)
+        S, W, Gp = _carry(ops, W0)
+        G = ops.apply(W)
+        return (lambda s, g, gp, e: eng.mix_track(s, g, gp, ef=e)[0]), \
+            (S, G, Gp, jnp.zeros_like(S))
+    return build
+
+
+def _build_dynamic_mix_track_ef(backend, wire, interpret=None):
+    def build(dtype):
+        import jax.numpy as jnp
+        from repro.core.consensus import DynamicConsensusEngine
+        dyn = DynamicConsensusEngine(schedule=_schedule(), K=2,
+                                     backend=backend, wire_dtype=wire,
+                                     interpret=interpret)
+        ops, W0 = _problem(dtype)
+        S, W, Gp = _carry(ops, W0)
+        G = ops.apply(W)
+        Ls, etas = dyn.operands(0, 1, dtype=S.dtype)
+        return (lambda s, g, gp, L, eta, e:
+                dyn.mix_track_traced(s, g, gp, L, eta, ef=e)[0]), \
+            (S, G, Gp, Ls[0], etas[0], jnp.zeros_like(S))
+    return build
+
+
+def _build_fastmix_wire_ef(wire):
+    def build(dtype):
+        import jax.numpy as jnp
+        from repro.core.mixing import fastmix_wire_ef
+        ops, W0 = _problem(dtype)
+        S = _carry(ops, W0)[0]
+        L = jnp.asarray(_topology().mixing, dtype)
+        return (lambda s, e, l:
+                fastmix_wire_ef(s, e, l, 0.5, 3, wire_dtype=wire)), \
+            (S, jnp.zeros_like(S), L)
+    return build
+
+
 TRACE_SPECS = (
     TraceSpec("deepca[scan,stacked]", _build_deepca, ("f64",)),
     TraceSpec("deepca[schedule,traced_scan]", _build_deepca_schedule,
@@ -345,6 +423,27 @@ TRACE_SPECS = (
               _build_dynamic_mix_track("pallas", wire="bf16",
                                        interpret=True), ("wire",)),
     TraceSpec("mixing.fastmix_wire", _build_fastmix_wire, ("wire",)),
+    # EF wire paths: int8 always runs the stacked per-round reference
+    # (per-agent scale is a cross-tile reduction); fp8 additionally has a
+    # true in-kernel mirror on the pallas backends
+    TraceSpec("engine.mix[stacked,int8]",
+              _build_engine_mix_ef("stacked", "int8"), ("wire:int8",)),
+    TraceSpec("engine.mix[pallas,fp8]",
+              _build_engine_mix_ef("pallas", "fp8", interpret=True),
+              ("wire:fp8",)),
+    TraceSpec("engine.mix_track[stacked,int8]",
+              _build_engine_mix_track_ef("stacked", "int8"),
+              ("wire:int8",)),
+    TraceSpec("engine.mix_track[pallas,fp8]",
+              _build_engine_mix_track_ef("pallas", "fp8", interpret=True),
+              ("wire:fp8",)),
+    TraceSpec("dynamic.mix_track_traced[pallas,fp8]",
+              _build_dynamic_mix_track_ef("pallas", "fp8", interpret=True),
+              ("wire:fp8",)),
+    TraceSpec("mixing.fastmix_wire_ef[int8]", _build_fastmix_wire_ef("int8"),
+              ("wire:int8",)),
+    TraceSpec("mixing.fastmix_wire_ef[fp8]", _build_fastmix_wire_ef("fp8"),
+              ("wire:fp8",)),
 )
 
 
@@ -354,10 +453,10 @@ def check_f64(fn, *args) -> List[str]:
     return audit_f64(jax.make_jaxpr(fn)(*args).jaxpr)
 
 
-def check_wire(fn, *args) -> List[str]:
+def check_wire(fn, *args, wire: str = "bf16") -> List[str]:
     """Audit one callable's wire-mode trace (f32 inputs)."""
     import jax
-    return audit_wire(jax.make_jaxpr(fn)(*args).jaxpr)
+    return audit_wire(jax.make_jaxpr(fn)(*args).jaxpr, wire=wire)
 
 
 def run(names: Optional[Sequence[str]] = None) -> PassResult:
@@ -378,14 +477,16 @@ def run(names: Optional[Sequence[str]] = None) -> PassResult:
                         fn, args = spec.build(jnp.float64)
                         bad = audit_f64(jax.make_jaxpr(fn)(*args).jaxpr)
                 else:
+                    wire = mode.split(":", 1)[1] if ":" in mode else "bf16"
                     fn, args = spec.build(jnp.float32)
-                    bad = audit_wire(jax.make_jaxpr(fn)(*args).jaxpr)
+                    bad = audit_wire(jax.make_jaxpr(fn)(*args).jaxpr,
+                                     wire=wire)
             except Exception as e:            # tracing itself must not break
                 result.add("trace-error", unit, 0,
                            f"failed to trace: {type(e).__name__}: {e}")
                 continue
             result.checked += 1
-            code = "f64-narrowing" if mode == "f64" else "bf16-accumulation"
+            code = "f64-narrowing" if mode == "f64" else "wire-accumulation"
             for msg in bad:
                 result.add(code, unit, 0, msg)
     return result

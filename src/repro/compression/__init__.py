@@ -1,2 +1,3 @@
 from .deepca_powersgd import DeEPCACompressor, CompressionState, LeafState
+from .ef import ef_transmit
 from . import sharded

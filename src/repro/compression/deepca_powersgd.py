@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compression.ef import ef_transmit
 from repro.core.step import qr_orth, sign_adjust
 from repro.kernels.fastmix import tracking_update
 from repro.core.mixing import fastmix, fastmix_eta
@@ -132,19 +133,26 @@ class DeEPCACompressor:
             st = state.leaves[key]
             shp = g.shape
             gm = g.reshape(g.shape[0], -1, g.shape[-1])         # (m,do,di)
-            gm = gm + st.err
-            # local power iterate P_j = G_j Q_j
-            P = jnp.einsum("mod,mdr->mor", gm, st.Q)
-            # subspace tracking + FastMix (Alg. 1 lines 4-5)
-            S = mix(tracking_update(st.S, P, st.P_prev))
-            # local QR + sign adjustment (Alg. 1 line 6 / Alg. 2)
-            Phat = qr_orth(S)
-            Phat = sign_adjust(Phat, Phat[0])
-            # right factor: Q_j = G_j^T Phat_j, gossip-averaged
-            Q = mix(jnp.einsum("mod,mor->mdr", gm, Phat))
-            ghat = jnp.einsum("mor,mdr->mod", Phat, Q)
-            err = (gm - ghat) * self.ef_decay
-            new_leaves[key] = LeafState(Q=Q, S=S, P_prev=P, err=err)
+            aux = {}
+
+            def lowrank(y, st=st, aux=aux):
+                """The lossy operator EF wraps: rank-r gossip projection."""
+                # local power iterate P_j = G_j Q_j
+                P = jnp.einsum("mod,mdr->mor", y, st.Q)
+                # subspace tracking + FastMix (Alg. 1 lines 4-5)
+                S = mix(tracking_update(st.S, P, st.P_prev))
+                # local QR + sign adjustment (Alg. 1 line 6 / Alg. 2)
+                Phat = qr_orth(S)
+                Phat = sign_adjust(Phat, Phat[0])
+                # right factor: Q_j = G_j^T Phat_j, gossip-averaged
+                Q = mix(jnp.einsum("mod,mor->mdr", y, Phat))
+                aux.update(P=P, S=S, Q=Q)
+                return jnp.einsum("mor,mdr->mod", Phat, Q)
+
+            ghat, err = ef_transmit(gm, st.err, lowrank,
+                                    decay=self.ef_decay)
+            new_leaves[key] = LeafState(Q=aux["Q"], S=aux["S"],
+                                        P_prev=aux["P"], err=err)
             out_flat[key] = ghat.reshape(shp)
 
         out = _rebuild(grads_stacked, out_flat)

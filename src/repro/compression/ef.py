@@ -1,0 +1,55 @@
+"""Error feedback: the ONE definition of the EF transmit step.
+
+Error feedback (Seide et al.; Karimireddy et al.) wraps any lossy
+``compress`` operator so its bias telescopes away across repeated
+transmissions: the residual of each send is added back into the *next*
+send, so what the receivers integrate over time is the uncompressed
+signal.  One update:
+
+    y        = x + err            # re-inject last step's residual
+    sent     = compress(y)        # the lossy payload actually transmitted
+    err_new  = (y - sent) * decay # what compression dropped, carried over
+
+This module is the registered single compute site for that arithmetic
+(see ``repro.analysis.registry``): the PowerSGD-style gradient compressors
+(:mod:`repro.compression.deepca_powersgd` / ``.sharded``) route through
+:func:`ef_transmit` directly.  The quantized gossip wire uses the
+*difference-send* form of the same recursion
+(:func:`repro.kernels.fastmix.ef_quantize`, carried in the ``PowerStep``
+``ef`` slot): there the residual is held implicitly by a wire replica
+``h`` — ``x - h_new`` after one send is exactly the ``err_new`` above
+with ``compress`` applied to the innovation — which is the registered
+gossip mirror of this site.
+
+Deliberately dependency-free (jax-typed but structurally pure): callable
+from kernels, compressors and engines without import cycles.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+
+
+def ef_transmit(x: jax.Array, err: jax.Array,
+                compress: Callable[[jax.Array], jax.Array],
+                decay: float = 1.0) -> Tuple[jax.Array, jax.Array]:
+    """One error-feedback transmit: compensate, compress, carry residual.
+
+    Args:
+      x: the value to transmit this step.
+      err: the residual carried from the previous transmit (zeros on the
+        first step / after a restart).
+      compress: the lossy operator (quantizer, low-rank projector, ...).
+      decay: residual damping in ``[0, 1]`` — ``1.0`` is classic EF;
+        ``< 1`` bounds the residual when the dropped component rotates
+        faster than the iteration can absorb it.
+
+    Returns:
+      ``(sent, err_new)`` — the compressed payload to put on the wire and
+      the residual to carry into the next call.
+    """
+    y = x + err
+    sent = compress(y)
+    err_new = (y - sent) * decay
+    return sent, err_new

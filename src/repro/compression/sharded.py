@@ -14,6 +14,7 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compression.ef import ef_transmit
 from repro.core.gossip_shard import fastmix_local, make_round_fn
 from repro.core.mixing import fastmix_eta
 from repro.core.step import qr_orth, sign_adjust
@@ -69,14 +70,21 @@ def compress_local(grads: PyTree, state: Dict[str, LeafState], *,
             continue
         st = state[key]
         shp = g.shape
-        gm = g.reshape(-1, g.shape[-1]) + st.err
-        P = gm @ st.Q
-        S = mix(tracking_update(st.S, P, st.P_prev))
-        Phat = qr_orth(S)
-        Phat = sign_adjust(Phat, jnp.abs(Phat))   # deterministic sign fix
-        Q = mix(gm.T @ Phat)
-        ghat = Phat @ Q.T
-        new_state[key] = LeafState(Q=Q, S=S, P_prev=P, err=gm - ghat)
+        aux = {}
+
+        def lowrank(y, st=st, aux=aux):
+            """The lossy operator EF wraps: rank-r gossip projection."""
+            P = y @ st.Q
+            S = mix(tracking_update(st.S, P, st.P_prev))
+            Phat = qr_orth(S)
+            Phat = sign_adjust(Phat, jnp.abs(Phat))  # deterministic signs
+            Q = mix(y.T @ Phat)
+            aux.update(P=P, S=S, Q=Q)
+            return Phat @ Q.T
+
+        ghat, err = ef_transmit(g.reshape(-1, g.shape[-1]), st.err, lowrank)
+        new_state[key] = LeafState(Q=aux["Q"], S=aux["S"], P_prev=aux["P"],
+                                   err=err)
         out_leaves.append(ghat.reshape(shp))
     grads_out = jax.tree_util.tree_unflatten(treedef, out_leaves)
     return grads_out, new_state

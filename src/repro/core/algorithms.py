@@ -34,10 +34,32 @@ from .driver import IterationDriver
 from .mixing import consensus_error
 from .operators import StackedOperators, top_k_eigvecs
 from .schedule import TopologySchedule
-from .step import PowerStep, qr_orth, sign_adjust   # noqa: F401 (re-export)
+from .step import PowerStep, qr_orth, sign_adjust, split_state  # noqa: F401
 from .topology import Topology
 
 _qr_orth = qr_orth   # backward-compatible private alias
+
+
+def resolve_acceleration(accelerated: Optional[bool] = None,
+                         momentum: Optional[float] = None):
+    """``(accelerated, momentum)`` from the explicit wrapper arguments with
+    the ``REPRO_ACCEL`` config knob as fallback.
+
+    ``accelerated=None`` defers to the config (set -> on, at the config's
+    momentum); an explicit ``True`` with ``momentum=None`` uses the config
+    momentum when set, else :data:`repro.runtime.config.DEFAULT_MOMENTUM`.
+    An explicit ``False`` wins over everything (and zeroes the momentum so
+    the step's carry layout is the unaccelerated one).
+    """
+    from repro.runtime.config import DEFAULT_MOMENTUM, get_config
+    cfg_beta = get_config().accel
+    if accelerated is None:
+        accelerated = cfg_beta is not None
+    if not accelerated:
+        return False, 0.0
+    if momentum is None:
+        momentum = cfg_beta if cfg_beta is not None else DEFAULT_MOMENTUM
+    return True, float(momentum)
 
 
 class PowerTrace(NamedTuple):
@@ -56,9 +78,10 @@ class DecentralizedPCAResult:
     W: jax.Array                # (m, d, k) final local estimates
     trace: PowerTrace
     name: str
-    # (S, W_stack, G_prev, offset) — resumable; offset = [comm_rounds, iters]
-    # carries the cumulative round/iteration count across restarts (legacy
-    # 3-tuples are accepted with a zero offset)
+    # (S, W_stack, G_prev[, W_prev][, ef], offset) — resumable; offset =
+    # [comm_rounds, iters] carries the cumulative round/iteration count
+    # across restarts (legacy 3-tuples are accepted with a zero offset);
+    # accelerated/EF-wire runs append their extra carry slots before it
     state: Optional[tuple] = None
 
 
@@ -91,24 +114,32 @@ def _make_trace(ops: StackedOperators, U: jax.Array,
 def resolve_engines(algorithm: str, topology: Optional[Topology], K: int, *,
                     accelerate: bool = True, backend: str = "auto",
                     engine=None,
-                    schedule: Optional[TopologySchedule] = None):
+                    schedule: Optional[TopologySchedule] = None,
+                    wire_dtype: Optional[str] = None):
     """(dynamic, static) engine pair from the public wrapper arguments.
 
     The shared translation from the paper-facing keyword surface
-    (``topology``/``schedule``/``engine``/``backend``/``accelerate``) to the
-    driver's engine slots — used by :func:`deepca`/:func:`depca` and by the
-    streaming tracker, so every entry point resolves engines identically.
+    (``topology``/``schedule``/``engine``/``backend``/``accelerate``/
+    ``wire_dtype``) to the driver's engine slots — used by
+    :func:`deepca`/:func:`depca` and by the streaming tracker, so every
+    entry point resolves engines identically.  ``wire_dtype=None`` defers
+    to the ``REPRO_WIRE_DTYPE`` config knob; a pre-built ``engine``
+    carries its own wire mode and ignores both.
     """
     if isinstance(engine, DynamicConsensusEngine):
         return engine, None
+    if engine is not None and schedule is None:
+        return None, engine
+    if wire_dtype is None:
+        from repro.runtime.config import get_config
+        wire_dtype = get_config().wire_dtype
     if schedule is not None:
         return DynamicConsensusEngine.for_algorithm(
             algorithm, schedule, K=K, backend=backend,
-            accelerate=accelerate), None
-    if engine is not None:
-        return None, engine
+            accelerate=accelerate, wire_dtype=wire_dtype), None
     return None, ConsensusEngine.for_algorithm(
-        algorithm, topology, K=K, backend=backend, accelerate=accelerate)
+        algorithm, topology, K=K, backend=backend, accelerate=accelerate,
+        wire_dtype=wire_dtype)
 
 
 def _run_decentralized(algorithm: str, ops: StackedOperators,
@@ -117,22 +148,30 @@ def _run_decentralized(algorithm: str, ops: StackedOperators,
                        state: Optional[tuple], backend: str, engine,
                        schedule: Optional[TopologySchedule],
                        increasing_consensus: bool = False,
+                       accelerated: Optional[bool] = None,
+                       momentum: Optional[float] = None,
+                       wire_dtype: Optional[str] = None,
                        ) -> DecentralizedPCAResult:
     """Shared deepca/depca wrapper: step + engines -> driver -> trace."""
     if U is None:
         U, _ = top_k_eigvecs(ops.mean_matrix(), k)
     dyn, eng = resolve_engines(algorithm, topology, K, accelerate=accelerate,
                                backend=backend, engine=engine,
-                               schedule=schedule)
+                               schedule=schedule, wire_dtype=wire_dtype)
+    accelerated, momentum = resolve_acceleration(accelerated, momentum)
+    step = PowerStep.for_algorithm(
+        algorithm, K, increasing_consensus=increasing_consensus,
+        accelerated=accelerated, momentum=momentum,
+        ef_wire=(dyn if dyn is not None else eng).ef_wire)
     rounds0 = iters0 = 0
     carry = None
     if state is not None:
-        carry = state[:3]
-        if len(state) > 3:
-            off = np.asarray(state[3])
+        # the offset rides as the structurally-identifiable last element so
+        # accelerated/EF states keep the same resumable-tuple contract
+        carry, off = split_state(state)
+        if off is not None:
+            off = np.asarray(off)
             rounds0, iters0 = int(off[0]), int(off[1])
-    step = PowerStep.for_algorithm(algorithm, K,
-                                   increasing_consensus=increasing_consensus)
     driver = IterationDriver(step=step, engine=eng, dynamic=dyn)
     run = driver.run(ops, W0, T=T, t0=iters0, carry=carry)
     trace = collect_trace(ops, U, run.S_hist, run.W_hist, None,
@@ -150,7 +189,10 @@ def deepca(ops: StackedOperators, topology: Optional[Topology],
            accelerate: bool = True, state: Optional[tuple] = None,
            backend: str = "auto",
            engine=None,
-           schedule: Optional[TopologySchedule] = None
+           schedule: Optional[TopologySchedule] = None,
+           accelerated: Optional[bool] = None,
+           momentum: Optional[float] = None,
+           wire_dtype: Optional[str] = None
            ) -> DecentralizedPCAResult:
     """Alg. 1 — Decentralized Exact PCA with subspace tracking.
 
@@ -178,11 +220,21 @@ def deepca(ops: StackedOperators, topology: Optional[Topology],
          (global, i.e. offset by a resumed state) mixes with
          ``schedule.topology_at(t)``; the per-step mixing matrices enter the
          scan as traced operands so graph changes never retrace.
+      accelerated: momentum-accelerated power iterations — the QR input
+         becomes ``S_new - momentum * W_prev`` (an extra ``W_prev`` carry
+         slot; no extra wire bytes).  ``None`` defers to ``REPRO_ACCEL``.
+      momentum: acceleration beta (optimal ~ ``lambda_{k+1}^2 / 4``);
+         ``None`` -> the config's value, else 0.25.
+      wire_dtype: gossip wire precision (``None``/``"bf16"``/``"int8"``/
+         ``"fp8"``; sub-bf16 modes carry an error-feedback residual slot).
+         ``None`` defers to ``REPRO_WIRE_DTYPE``; ignored when ``engine``
+         is supplied.
     """
     return _run_decentralized("deepca", ops, topology, W0, k=k, T=T, K=K,
                               U=U, accelerate=accelerate, state=state,
                               backend=backend, engine=engine,
-                              schedule=schedule)
+                              schedule=schedule, accelerated=accelerated,
+                              momentum=momentum, wire_dtype=wire_dtype)
 
 
 def depca(ops: StackedOperators, topology: Optional[Topology],
@@ -192,7 +244,10 @@ def depca(ops: StackedOperators, topology: Optional[Topology],
           backend: str = "auto",
           engine=None,
           schedule: Optional[TopologySchedule] = None,
-          state: Optional[tuple] = None
+          state: Optional[tuple] = None,
+          accelerated: Optional[bool] = None,
+          momentum: Optional[float] = None,
+          wire_dtype: Optional[str] = None
           ) -> DecentralizedPCAResult:
     """Baseline decentralized power method (Eqn. 3.4; Wai et al. 2017).
 
@@ -210,7 +265,9 @@ def depca(ops: StackedOperators, topology: Optional[Topology],
                               U=U, accelerate=accelerate, state=state,
                               backend=backend, engine=engine,
                               schedule=schedule,
-                              increasing_consensus=increasing_consensus)
+                              increasing_consensus=increasing_consensus,
+                              accelerated=accelerated, momentum=momentum,
+                              wire_dtype=wire_dtype)
 
 
 def collect_trace(ops, U, S_hist, W_hist, K: Optional[int] = None,

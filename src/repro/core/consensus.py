@@ -86,12 +86,18 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from .mixing import fastmix, fastmix_eta, fastmix_wire, naive_mix
+from .mixing import fastmix, fastmix_eta, fastmix_wire, fastmix_wire_ef, \
+    naive_mix
 from .topology import Topology
 
 BACKENDS = ("auto", "stacked", "pallas", "shard_map")
 VARIANTS = ("fastmix", "naive")
-WIRE_DTYPES = (None, "bf16")
+WIRE_DTYPES = (None, "bf16", "int8", "fp8")
+#: Wire modes coarse enough to need error feedback: the engines' ``mix`` /
+#: ``mix_track`` take and return a per-agent ``ef`` residual for these
+#: (``PowerStep(ef_wire=True)`` carries it in the iteration state), so the
+#: quantization bias telescopes away instead of flooring the error.
+EF_WIRE_DTYPES = ("int8", "fp8")
 
 #: Default mesh-axis name for the shard_map backend.
 AXIS = "agents"
@@ -129,6 +135,28 @@ def _use_pallas_kernel(interpret: Optional[bool]) -> bool:
     """True when the pallas backend runs the real kernel (TPU) or the
     interpret-mode kernel (tests); False -> the algebraic fallback."""
     return interpret is True or jax.default_backend() == "tpu"
+
+
+def _check_ef(wire_dtype: Optional[str], ef) -> bool:
+    """Validate the caller's ``ef`` residual against the wire mode.
+
+    Returns True when the call must run the error-feedback path (an EF
+    wire mode with a residual supplied); raises on the two mismatches so
+    a dropped or spurious residual fails loudly instead of silently
+    changing convergence behaviour.
+    """
+    if wire_dtype in EF_WIRE_DTYPES:
+        if ef is None:
+            raise ValueError(
+                f"wire_dtype {wire_dtype!r} carries an error-feedback "
+                "residual; pass ef= (zeros_like the iterate on the first "
+                "call / after a restart)")
+        return True
+    if ef is not None:
+        raise ValueError(
+            f"ef= is only meaningful for the EF wire modes "
+            f"{EF_WIRE_DTYPES}; this engine's wire_dtype is {wire_dtype!r}")
+    return False
 
 
 def _fused_track_mix(S: jax.Array, G: jax.Array, G_prev: jax.Array,
@@ -193,6 +221,61 @@ def _fused_mix(S: jax.Array, L: jax.Array, eta, rounds: int, *,
     return _fm.fastmix_poly(S, L32, eta, rounds).astype(S.dtype)
 
 
+def _fused_mix_ef(S: jax.Array, ef: jax.Array, L: jax.Array, eta,
+                  rounds: int, *, interpret: Optional[bool],
+                  block_n: Optional[int], wire: str):
+    """EF-wire counterpart of :func:`_fused_mix` -> ``(S_out, ef_out)``.
+
+    Quantized sends can never collapse into ``P_K(L)``, so there is no
+    polynomial fallback: fp8 (scale-free, elementwise) runs the true
+    in-kernel EF mirror :func:`repro.kernels.fastmix.fastmix_ef_fused`
+    when the kernel fires; int8's per-agent scale is a cross-tile
+    reduction the column-tiled kernel cannot see, so it (and every
+    off-kernel/f64 case) runs the per-round stacked reference.
+    """
+    from repro.kernels import fastmix as _fm
+    if S.dtype == jnp.float64:
+        return fastmix_wire_ef(S, ef, L.astype(jnp.float64), eta, rounds,
+                               wire_dtype=wire)
+    L32 = L.astype(jnp.float32)
+    if wire == "fp8" and _use_pallas_kernel(interpret):
+        out, ef_out = _fm.fastmix_ef_fused(S, ef, L32, eta, rounds,
+                                           wire=wire, block_n=block_n,
+                                           interpret=interpret is True)
+    else:
+        out, ef_out = fastmix_wire_ef(
+            S.astype(jnp.float32), ef.astype(jnp.float32), L32, eta,
+            rounds, wire_dtype=wire)
+    return out.astype(S.dtype), ef_out.astype(S.dtype)
+
+
+def _fused_track_mix_ef(S: jax.Array, G: jax.Array, G_prev: jax.Array,
+                        ef: jax.Array, L: jax.Array, eta, rounds: int, *,
+                        interpret: Optional[bool], block_n: Optional[int],
+                        wire: str):
+    """EF-wire counterpart of :func:`_fused_track_mix` -> ``(S_out, ef_out)``.
+
+    Same dispatch rules as :func:`_fused_mix_ef`; the fp8 kernel runs the
+    subspace-tracking combine in-register ahead of the EF rounds.
+    """
+    from repro.kernels import fastmix as _fm
+    if S.dtype == jnp.float64:
+        x = _fm.tracking_update(S, G, G_prev)
+        return fastmix_wire_ef(x, ef, L.astype(jnp.float64), eta, rounds,
+                               wire_dtype=wire)
+    L32 = L.astype(jnp.float32)
+    if wire == "fp8" and _use_pallas_kernel(interpret):
+        out, ef_out = _fm.fastmix_track_ef_fused(
+            S, G, G_prev, ef, L32, eta, rounds, wire=wire,
+            block_n=block_n, interpret=interpret is True)
+    else:
+        x = _fm.tracking_update(S, G, G_prev)
+        out, ef_out = fastmix_wire_ef(
+            x.astype(jnp.float32), ef.astype(jnp.float32), L32, eta,
+            rounds, wire_dtype=wire)
+    return out.astype(S.dtype), ef_out.astype(S.dtype)
+
+
 @dataclasses.dataclass(frozen=True)
 class ConsensusEngine:
     """Gossip consensus over a fixed topology with a pluggable backend.
@@ -220,13 +303,21 @@ class ConsensusEngine:
         then the persistent autotune cache (:mod:`repro.kernels.autotune`)
         keyed on (device kind, shape bucket, dtype) — so a tuned machine
         runs tuned tiles with no engine change.
-      wire_dtype: gossip **wire** precision — ``None`` (full precision) or
-        ``"bf16"``: each round's *sent* iterate is rounded to bf16
-        (halving wire bytes) while the tracking combine, the Chebyshev
-        recursion state and the QR all keep accumulating in fp32 (f64
-        stays f64).  Supported on the ``stacked`` and ``pallas`` backends;
-        per-round quantization cannot collapse into ``P_K(L)``, so the
-        off-TPU pallas fallback runs the per-round wire loop.
+      wire_dtype: gossip **wire** precision — ``None`` (full precision),
+        ``"bf16"``, ``"int8"`` or ``"fp8"``: each round's *sent* iterate
+        is quantized (bf16 halves wire bytes; int8/fp8 quarter them) while
+        the tracking combine, the Chebyshev recursion state and the QR all
+        keep accumulating in fp32 (f64 stays f64).  The sub-bf16 modes are
+        **error-feedback** wires (:data:`EF_WIRE_DTYPES`): :meth:`mix` /
+        :meth:`mix_track` then take and return a per-agent ``ef`` residual
+        (``PowerStep(ef_wire=True)`` carries it in the iteration state) so
+        the coarse quantizer's bias telescopes away instead of flooring
+        tan-theta like a plain low-precision wire would.  Supported on the
+        ``stacked`` and ``pallas`` backends; per-round quantization cannot
+        collapse into ``P_K(L)``, so the off-TPU pallas fallback runs the
+        per-round wire loop (fp8 gets a true in-kernel EF mirror, int8's
+        per-agent scale is a cross-tile reduction so it always runs the
+        stacked reference).
     """
 
     topology: Topology
@@ -292,53 +383,91 @@ class ConsensusEngine:
             return self.topology.naive_rate(r)
         return self.topology.fastmix_rate(r)
 
+    @property
+    def ef_wire(self) -> bool:
+        """True when this engine's wire mode carries an EF residual."""
+        return self.wire_dtype in EF_WIRE_DTYPES
+
+    def bytes_per_round(self, d: int, k: int) -> int:
+        """Wire bytes ONE agent sends per gossip round for a ``(d, k)``
+        iterate.
+
+        Full precision sends fp32 (4 B/entry), ``bf16`` 2, ``int8``/
+        ``fp8`` 1; int8 additionally ships one fp32 per-agent scale per
+        round.  Exact for the stacked/pallas backends (shard_map rejects
+        wire modes and gossips at native mesh precision).
+        """
+        from repro.kernels.fastmix import WIRE_ITEMSIZE
+        n = int(d) * int(k) * WIRE_ITEMSIZE[self.wire_dtype]
+        if self.wire_dtype == "int8":
+            n += 4
+        return n
+
     # ------------------------------------------------- stacked-form mixing
-    def mix(self, S: jax.Array, rounds: Optional[int] = None) -> jax.Array:
+    def mix(self, S: jax.Array, rounds: Optional[int] = None, *,
+            ef: Optional[jax.Array] = None):
         """Mix stacked ``(m, ...)`` agent variables; preserves the mean.
 
         ``rounds`` overrides the engine default K (static per call — this
-        is what DePCA's increasing-consensus schedule uses).
+        is what DePCA's increasing-consensus schedule uses).  On EF wire
+        modes (:data:`EF_WIRE_DTYPES`) the per-agent residual ``ef`` is
+        required and the call returns ``(S_out, ef_out)``; otherwise it
+        returns ``S_out`` alone.
         """
         r = self.K if rounds is None else int(rounds)
+        ef_mode = _check_ef(self.wire_dtype, ef)
         if r <= 0:
-            return S
+            return (S, ef) if ef_mode else S
         if S.shape[0] != self.topology.m:
             raise ValueError(
                 f"leading (agent) axis {S.shape[0]} != topology m="
                 f"{self.topology.m}")
         if self.backend == "stacked":
             L = self._L(S.dtype)
+            if ef_mode:
+                return fastmix_wire_ef(S, ef, L, self.eta, r,
+                                       wire_dtype=self.wire_dtype)
             if self.wire_dtype is not None:
                 return fastmix_wire(S, L, self.eta, r)
             if self.variant == "naive":
                 return naive_mix(S, L, r)
             return fastmix(S, L, self.eta, r)
         if self.backend == "pallas":
+            if ef_mode:
+                return self._mix_fused_ef(S, ef, r)
             return self._mix_fused(S, r)
         return self._mix_shard_map(S, r)
 
     def mix_track(self, S: jax.Array, G: jax.Array, G_prev: jax.Array,
-                  rounds: Optional[int] = None) -> jax.Array:
+                  rounds: Optional[int] = None, *,
+                  ef: Optional[jax.Array] = None):
         """Fused Eqns. (3.1)+(3.2): gossip the subspace-tracked iterate.
 
         Semantically ``mix(tracking_update(S, G, G_prev))`` on every
         backend; the ``pallas`` backend runs the combine inside the fused
         launch (one fewer HBM pass per power iteration), the others fall
-        through to :meth:`mix` on the shared tracking compute site.
+        through to :meth:`mix` on the shared tracking compute site.  EF
+        wire modes require ``ef`` and return ``(S_out, ef_out)``.
         """
         r = self.K if rounds is None else int(rounds)
+        ef_mode = _check_ef(self.wire_dtype, ef)
         if self.backend == "pallas" and r > 0:
             if S.shape[0] != self.topology.m:
                 raise ValueError(
                     f"leading (agent) axis {S.shape[0]} != topology m="
                     f"{self.topology.m}")
             dtype = jnp.float64 if S.dtype == jnp.float64 else jnp.float32
+            if ef_mode:
+                return _fused_track_mix_ef(
+                    S, G, G_prev, ef, self._L(dtype), self.eta, r,
+                    interpret=self.interpret, block_n=self.block_n,
+                    wire=self.wire_dtype)
             return _fused_track_mix(S, G, G_prev, self._L(dtype), self.eta,
                                     r, interpret=self.interpret,
                                     block_n=self.block_n,
                                     wire=self.wire_dtype is not None)
         from repro.kernels.fastmix import tracking_update
-        return self.mix(tracking_update(S, G, G_prev), rounds=rounds)
+        return self.mix(tracking_update(S, G, G_prev), rounds=rounds, ef=ef)
 
     def apply_mix_track(self, S: jax.Array, W: jax.Array, G_prev: jax.Array,
                         ops, rounds: Optional[int] = None):
@@ -355,6 +484,12 @@ class ConsensusEngine:
         ``ops.apply`` + :meth:`mix_track` — which on the off-TPU pallas
         backend IS the poly fallback the acceptance test pins.
         """
+        if self.ef_wire:
+            raise ValueError(
+                "apply_mix_track does not thread the EF residual; EF wire "
+                f"modes {EF_WIRE_DTYPES} compose ops.apply with "
+                "mix_track(..., ef=) instead (PowerStep does this "
+                "automatically when ef_wire=True)")
         r = self.K if rounds is None else int(rounds)
         if (self.backend == "pallas" and r > 0 and ops.dense is not None
                 and S.dtype != jnp.float64
@@ -377,6 +512,12 @@ class ConsensusEngine:
         return _fused_mix(S, self._L(dtype), self.eta, rounds,
                           interpret=self.interpret, block_n=self.block_n,
                           wire=self.wire_dtype is not None)
+
+    def _mix_fused_ef(self, S: jax.Array, ef: jax.Array, rounds: int):
+        dtype = jnp.float64 if S.dtype == jnp.float64 else jnp.float32
+        return _fused_mix_ef(S, ef, self._L(dtype), self.eta, rounds,
+                             interpret=self.interpret, block_n=self.block_n,
+                             wire=self.wire_dtype)
 
     def _mix_shard_map(self, S: jax.Array, rounds: int) -> jax.Array:
         fn = self._sharded_mix_cache.get(rounds)
@@ -465,7 +606,7 @@ class DynamicConsensusEngine:
     axis: str = AXIS
     interpret: Optional[bool] = None
     block_n: Optional[int] = None       # None -> kernels resolve (autotune)
-    wire_dtype: Optional[str] = None    # None / "bf16" (see ConsensusEngine)
+    wire_dtype: Optional[str] = None    # see ConsensusEngine.wire_dtype
     _engines: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False, compare=False)
     _traced_cache: dict = dataclasses.field(
@@ -537,21 +678,47 @@ class DynamicConsensusEngine:
         etas = jnp.asarray([self.eta_of(tp) for tp in topos], dtype=dtype)
         return Ls, etas
 
+    @property
+    def ef_wire(self) -> bool:
+        """True when this engine's wire mode carries an EF residual."""
+        return self.wire_dtype in EF_WIRE_DTYPES
+
+    def bytes_per_round(self, d: int, k: int) -> int:
+        """Per-agent wire bytes per gossip round; see
+        :meth:`ConsensusEngine.bytes_per_round` (topology-independent, so
+        schedule swaps never change it)."""
+        from repro.kernels.fastmix import WIRE_ITEMSIZE
+        n = int(d) * int(k) * WIRE_ITEMSIZE[self.wire_dtype]
+        if self.wire_dtype == "int8":
+            n += 4
+        return n
+
     def mix_traced(self, S: jax.Array, L: jax.Array, eta,
-                   rounds: Optional[int] = None) -> jax.Array:
+                   rounds: Optional[int] = None, *,
+                   ef: Optional[jax.Array] = None):
         """Mix with ``(L, eta)`` as traced values (jit-cache keyed on shape).
 
         This is the scan-body entry point: callable under an outer trace,
-        with ``L`` one slice of :meth:`operands`' stack.
+        with ``L`` one slice of :meth:`operands`' stack.  EF wire modes
+        require ``ef`` and return ``(S_out, ef_out)``.
         """
         r = self.K if rounds is None else int(rounds)
+        ef_mode = _check_ef(self.wire_dtype, ef)
         if r <= 0:
-            return S
+            return (S, ef) if ef_mode else S
         if self.backend == "stacked":
+            if ef_mode:
+                return fastmix_wire_ef(S, ef, L.astype(S.dtype), eta, r,
+                                       wire_dtype=self.wire_dtype)
             if self.wire_dtype is not None:
                 return fastmix_wire(S, L.astype(S.dtype), eta, r)
             return fastmix(S, L.astype(S.dtype), eta, r)
         if self.backend == "pallas":
+            if ef_mode:
+                return _fused_mix_ef(S, ef, L, eta, r,
+                                     interpret=self.interpret,
+                                     block_n=self.block_n,
+                                     wire=self.wire_dtype)
             return _fused_mix(S, L, eta, r, interpret=self.interpret,
                               block_n=self.block_n,
                               wire=self.wire_dtype is not None)
@@ -559,23 +726,31 @@ class DynamicConsensusEngine:
 
     def mix_track_traced(self, S: jax.Array, G: jax.Array, G_prev: jax.Array,
                          L: jax.Array, eta,
-                         rounds: Optional[int] = None) -> jax.Array:
+                         rounds: Optional[int] = None, *,
+                         ef: Optional[jax.Array] = None):
         """Tracked :meth:`mix_traced` — the scan-body DeEPCA gossip call.
 
         ``pallas`` fuses the subspace-tracking combine into the launch with
         ``(L, eta)`` still traced (no retrace on graph swap); the other
         backends compose the shared tracking compute site with the plain
-        traced mix.
+        traced mix.  EF wire modes require ``ef`` and return
+        ``(S_out, ef_out)``.
         """
         r = self.K if rounds is None else int(rounds)
+        ef_mode = _check_ef(self.wire_dtype, ef)
         if self.backend == "pallas" and r > 0:
+            if ef_mode:
+                return _fused_track_mix_ef(S, G, G_prev, ef, L, eta, r,
+                                           interpret=self.interpret,
+                                           block_n=self.block_n,
+                                           wire=self.wire_dtype)
             return _fused_track_mix(S, G, G_prev, L, eta, r,
                                     interpret=self.interpret,
                                     block_n=self.block_n,
                                     wire=self.wire_dtype is not None)
         from repro.kernels.fastmix import tracking_update
         return self.mix_traced(tracking_update(S, G, G_prev), L, eta,
-                               rounds=rounds)
+                               rounds=rounds, ef=ef)
 
     def apply_mix_track_traced(self, S: jax.Array, W: jax.Array,
                                G_prev: jax.Array, ops, L: jax.Array, eta,
@@ -588,6 +763,12 @@ class DynamicConsensusEngine:
         fallback keeps the bit-equality contract everywhere the kernel
         does not fire.
         """
+        if self.ef_wire:
+            raise ValueError(
+                "apply_mix_track_traced does not thread the EF residual; "
+                f"EF wire modes {EF_WIRE_DTYPES} compose ops.apply with "
+                "mix_track_traced(..., ef=) instead (PowerStep does this "
+                "automatically when ef_wire=True)")
         r = self.K if rounds is None else int(rounds)
         if (self.backend == "pallas" and r > 0 and ops.dense is not None
                 and S.dtype != jnp.float64

@@ -95,7 +95,7 @@ def local_apply(A: jax.Array, W: jax.Array,
 class DriverRun(NamedTuple):
     """One driver execution window (T iterations of one problem)."""
 
-    carry: Carry               # (S, W, G_prev) final resumable state
+    carry: Carry               # (S, W, G_prev[, W_prev][, ef]) final state
     S_hist: jax.Array          # (T, m, d, k) pre-QR iterates
     W_hist: jax.Array          # (T, m, d, k) per-iteration estimates
     rounds: np.ndarray         # (T,) cumulative gossip rounds (this window)
@@ -110,10 +110,11 @@ class BatchRun(NamedTuple):
     G_prev: jax.Array          # (B, m, d, k)
     S_hist: Optional[jax.Array] = None    # (B, T, m, d, k) when requested
     W_hist: Optional[jax.Array] = None
+    extras: Tuple[jax.Array, ...] = ()    # (B, m, d, k) W_prev / ef slots
 
     @property
     def carries(self) -> Carry:
-        return (self.S, self.W, self.G_prev)
+        return (self.S, self.W, self.G_prev) + tuple(self.extras)
 
 
 @dataclasses.dataclass
@@ -159,7 +160,10 @@ class IterationDriver:
         if carry is None:
             carry = self.step.init_carry(ops, W0, dtype=dt)
         else:
-            carry = tuple(x.astype(dt) for x in carry[:3])
+            # accept a bare (S, W, G_prev) from an unaccelerated/plain-wire
+            # producer; normalize_carry zero-fills the step's extra slots
+            carry = self.step.normalize_carry(
+                tuple(x.astype(dt) for x in carry))
         if self.dynamic is not None and \
                 self.dynamic.schedule.constant_m(t0, T) != ops.m:
             raise ValueError(
@@ -185,9 +189,18 @@ class IterationDriver:
         # DriverRun already carries the paper's observables host-side
         # (cumulative gossip rounds, per-iteration contraction bound) —
         # stream them when a sink is installed.
-        telemetry.emit_iterations("driver.run", t0, out.rounds, out.rates,
-                                  substrate=substrate)
+        telemetry.emit_iterations(
+            "driver.run", t0, out.rounds, out.rates, substrate=substrate,
+            bytes_per_round=self.bytes_per_round(W0))
         return out
+
+    def bytes_per_round(self, W0: jax.Array) -> int:
+        """Per-agent wire bytes per gossip round at this iterate shape
+        (the engine's :meth:`~ConsensusEngine.bytes_per_round` at the
+        ``(d, k)`` of ``W0``) — the cost model behind the telemetry
+        ``bytes_on_wire`` field and the bench ``bytes_per_round`` rows."""
+        d, k = int(W0.shape[-2]), int(W0.shape[-1])
+        return (self.engine or self.dynamic).bytes_per_round(d, k)
 
     # -------------------------------------------------- streaming substrate
     def run_stream(self, ticks, W0, *, T: int, t0: int = 0,
@@ -220,6 +233,63 @@ class IterationDriver:
             carry = run.carry
             t0 += T
             yield run
+
+    # ------------------------------------------------------ stage profiling
+    def profile_stages(self, ops: StackedOperators, W0: jax.Array, *,
+                       iters: int = 5) -> dict:
+        """Wall-clock the three stages of one power iteration separately —
+        local ``apply`` (``A_j W_j``), gossip ``mix`` (Eqns. 3.1+3.2) and
+        ``orth`` (Eqn. 3.3 QR + Alg. 2 sign adjust) — and emit one
+        ``stage`` telemetry event per stage.
+
+        Each stage runs as its own jitted program on representative
+        operands from ``init_carry``: one untimed warm call, then
+        best-of-``iters`` synchronized (``block_until_ready``) timings.
+        The split is diagnostic — production steps run the *fused* path,
+        so the sum of stages upper-bounds (not equals) the fused
+        per-iteration cost; the ratio is what tells an operator whether a
+        deployment is compute-, gossip- or QR-bound.  Returns
+        ``{"apply": us, "mix": us, "orth": us}``.
+        """
+        import time
+        from .step import qr_orth, sign_adjust
+
+        step = self.step
+        dt = jnp.result_type(W0.dtype, ops.dtype)
+        carry = step.init_carry(ops, W0, dtype=dt)
+        S, W, G_prev = carry[:3]
+        eng = self.engine if self.engine is not None \
+            else self.dynamic.engine_at(0)
+        mix = step.make_mix(eng)
+        W0_c = jnp.asarray(W0, dt)
+
+        apply_j = jax.jit(lambda V: ops.apply(V))
+        if step.ef_wire:
+            ef0 = jnp.zeros_like(S)
+            mix_j = jax.jit(lambda s, g, gp: mix(s, g, gp, ef0))
+        else:
+            mix_j = jax.jit(lambda s, g, gp: mix(s, g, gp))
+        orth_j = jax.jit(lambda s: sign_adjust(qr_orth(s), W0_c))
+
+        def best_us(fn, *args):
+            jax.block_until_ready(fn(*args))     # warm (trace + compile)
+            best = float("inf")
+            for _ in range(max(1, int(iters))):
+                tic = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                best = min(best, time.perf_counter() - tic)
+            return best * 1e6
+
+        G = apply_j(W)
+        out = {
+            "apply": best_us(apply_j, W),
+            "mix": best_us(mix_j, S, G, G_prev),
+            "orth": best_us(orth_j, S),
+        }
+        for stage, us in out.items():
+            telemetry.emit("stage", source="driver.profile_stages",
+                           stage=stage, us=us, iters=int(iters))
+        return out
 
     @staticmethod
     def _rebuild_ops(kind: str, arr: jax.Array) -> StackedOperators:
@@ -385,7 +455,9 @@ class IterationDriver:
         else:
             fn = self._batch_fn(T, kind, with_history, dynamic=False)
             out = fn(arr, W0)
-        (S, W, G_prev), hists = out
+        carry, hists = out
+        S, W, G_prev = carry[:3]
+        extras = tuple(carry[3:])
         if telemetry.enabled():
             K = step.rounds
             if self.dynamic is not None:
@@ -394,11 +466,13 @@ class IterationDriver:
                 rates = np.full(T, self.engine.contraction_rate(K),
                                 dtype=np.float32)
             rounds = np.arange(1, T + 1, dtype=np.float32) * float(K)
-            telemetry.emit_iterations("driver.run_batch", 0, rounds, rates,
-                                      batch=B)
+            telemetry.emit_iterations(
+                "driver.run_batch", 0, rounds, rates, batch=B,
+                bytes_per_round=self.bytes_per_round(W0))
         if with_history:
-            return BatchRun(S, W, G_prev, S_hist=hists[0], W_hist=hists[1])
-        return BatchRun(S, W, G_prev)
+            return BatchRun(S, W, G_prev, S_hist=hists[0], W_hist=hists[1],
+                            extras=extras)
+        return BatchRun(S, W, G_prev, extras=extras)
 
     @staticmethod
     def _stack_problems(ops_batch) -> Tuple[str, jax.Array]:
@@ -469,30 +543,40 @@ class IterationDriver:
         Gossip goes through ``engine.local_mix_track`` (ring/hypercube
         ``collective_permute`` or dense ``all_gather``, chosen structurally
         by the engine's round fn); the body is the shared PowerStep on the
-        per-device ``(1, d, k)`` slice.
+        per-device ``(1, d, k)`` slice.  The jitted step takes and returns
+        ``step.carry_slots`` state arrays (the accelerated ``W_prev`` slot
+        shards like the rest; EF wire modes are rejected — wire precision
+        is a stacked/pallas feature).
         """
         import functools
         from jax.sharding import PartitionSpec as P
         from repro.runtime.compat import shard_map
 
         step = self.step
+        if step.ef_wire:
+            raise ValueError(
+                "EF wire modes are not supported on the shard_map "
+                "substrate (the engine rejects wire_dtype there)")
+        nslots = step.carry_slots
         spec_v = P(axis)
 
         @functools.partial(
             shard_map, mesh=mesh,
-            in_specs=(P(axis), spec_v, spec_v, spec_v, P()),
-            out_specs=(spec_v, spec_v, spec_v),
+            in_specs=(P(axis),) + (spec_v,) * nslots + (P(),),
+            out_specs=(spec_v,) * nslots,
             check_vma=False)
-        def _step(A, S, W, G_prev, W0):
+        def _step(A, *rest):
+            carry, W0 = rest[:-1], rest[-1]
+
             def mix(S_, G_, Gp_):
                 if step.track:
                     return engine.local_mix_track(S_, G_, Gp_, axis=axis)
                 return engine.local_mix(G_, axis=axis)
 
-            (S_new, W_new, G), _ = step(
-                (S, W, G_prev), mix, W0,
+            new_carry, _ = step(
+                carry, mix, W0,
                 lambda V: local_apply(A, V, kind=operator_kind))
-            return S_new, W_new, G
+            return new_carry
 
         return jax.jit(_step)
 
@@ -510,15 +594,21 @@ class IterationDriver:
         from repro.kernels.fastmix import tracking_update
 
         step = self.step
+        if step.ef_wire:
+            raise ValueError(
+                "EF wire modes are not supported on the shard_map "
+                "substrate (the engine rejects wire_dtype there)")
         K = step.rounds
+        nslots = step.carry_slots
         spec_v = P(axis)
 
         @functools.partial(
             shard_map, mesh=mesh,
-            in_specs=(P(axis), spec_v, spec_v, spec_v, P(), P(), P()),
-            out_specs=(spec_v, spec_v, spec_v),
+            in_specs=(P(axis),) + (spec_v,) * nslots + (P(), P(), P()),
+            out_specs=(spec_v,) * nslots,
             check_vma=False)
-        def _step(A, S, W, G_prev, W0, L, eta):
+        def _step(A, *rest):
+            carry, (W0, L, eta) = rest[:-3], rest[-3:]
             from .gossip_shard import _dense_round, fastmix_local
 
             def mix(S_, G_, Gp_):
@@ -526,9 +616,9 @@ class IterationDriver:
                 return fastmix_local(
                     x, lambda y: _dense_round(y, L, axis), eta, K)
 
-            (S_new, W_new, G), _ = step(
-                (S, W, G_prev), mix, W0,
+            new_carry, _ = step(
+                carry, mix, W0,
                 lambda V: local_apply(A, V, kind=operator_kind))
-            return S_new, W_new, G
+            return new_carry
 
         return jax.jit(_step)

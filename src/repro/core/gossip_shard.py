@@ -189,6 +189,11 @@ class DistributedDeEPCA:
     # trailing block => dense — ambiguous when n == d, so declare it when
     # you know it)
     operator_kind: str = "auto"
+    # momentum-accelerated power iterations: the W_prev history slot
+    # shards along the agent axis like the rest of the carry (no extra
+    # wire traffic — momentum is local arithmetic before the QR)
+    accelerated: bool = False
+    momentum: float = 0.0
     _step_cache: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False)
 
@@ -218,10 +223,14 @@ class DistributedDeEPCA:
         self.engine = dataclasses.replace(self.engine, topology=topology)
 
     # -- per-iteration programs (built by the shared driver layer) --------
+    def _step(self) -> PowerStep:
+        return PowerStep.for_algorithm("deepca", self.K,
+                                       accelerated=self.accelerated,
+                                       momentum=self.momentum)
+
     def _driver(self) -> IterationDriver:
         """A driver over the CURRENT engine (cheap; steps are cached here)."""
-        return IterationDriver(step=PowerStep.for_algorithm("deepca", self.K),
-                               engine=self.engine)
+        return IterationDriver(step=self._step(), engine=self.engine)
 
     def step_fn(self):
         """Jitted step for the CURRENT topology (structured lowering path)."""
@@ -272,19 +281,20 @@ class DistributedDeEPCA:
         rep = NamedSharding(self.mesh, P())
         W_stack = jax.device_put(
             jnp.broadcast_to(W0, (m, d, self.k)), shard)
-        S = W_stack
-        G_prev = W_stack
+        # the step's full slot layout (zeroed W_prev for accelerated runs);
+        # zeros_like keeps the agent-axis sharding of the seeded slots
+        carry = self._step().normalize_carry((W_stack, W_stack, W_stack))
         W0 = jax.device_put(W0, rep)
         A = jax.device_put(A, shard)
         if schedule is None:
             step = self.step_fn()
             for _ in range(self.T):
-                S, W_stack, G_prev = step(A, S, W_stack, G_prev, W0)
-            return W_stack, S
+                carry = step(A, *carry, W0)
+            return carry[1], carry[0]
         if schedule.constant_m(0, self.T) != m:
             raise ValueError(
                 f"schedule {schedule.name!r} has m != mesh size {m}")
         for t in range(self.T):
             step, extra = self._step_for(schedule.topology_at(t))
-            S, W_stack, G_prev = step(A, S, W_stack, G_prev, W0, *extra)
-        return W_stack, S
+            carry = step(A, *carry, W0, *extra)
+        return carry[1], carry[0]

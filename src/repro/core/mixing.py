@@ -103,6 +103,49 @@ def fastmix_wire(S: jax.Array, L: jax.Array, eta: jax.Array | float, K: int,
     return out
 
 
+@functools.partial(jax.jit, static_argnames=("K", "wire_dtype"))
+def fastmix_wire_ef(S: jax.Array, err: jax.Array,
+                    L: jax.Array, eta: jax.Array | float, K: int,
+                    wire_dtype: str = "int8"
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """FastMix over an **error-feedback quantized** wire: the per-round
+    stacked reference for the engines' ``wire_dtype="int8"|"fp8"`` modes.
+
+    Each round transmits the quantized *innovation* against a per-agent
+    wire replica ``err`` (CHOCO-style difference send, advanced through
+    :func:`repro.kernels.fastmix.ef_quantize` — the single EF-quantization
+    compute site, shared with the fused kernels' mirror).  Receivers
+    combine the mean-preserving form ``cur + (L - I) h``: the correction
+    term has zero agent-mean under the doubly-stochastic ``L``, so
+    quantization cannot bias the tracked mean, and because the int8/fp8
+    quantizers are relative, the injected noise shrinks with the
+    innovation — the wire converges exactly instead of flooring tan-theta
+    like a plain sub-bf16 round-trip would.  The replica is carried
+    across iterations in the ``PowerStep`` ``ef`` slot (zeros on the
+    first call).  The recursion state and every receiver's combine stay
+    in the full compute dtype (f64 in, f64 out).  Like
+    :func:`fastmix_wire`, quantization is nonlinear: no ``P_K(L)``
+    collapse exists, so every fused fallback for EF modes is this
+    per-round loop (fp8 additionally has a true in-kernel mirror,
+    :func:`repro.kernels.fastmix.fastmix_ef_fused`).
+
+    Returns ``(S_out, err_out)`` — the mixed iterate and the advanced
+    replica.
+    """
+    if K <= 0:
+        return S, err
+    from repro.kernels.fastmix import ef_quantize
+
+    def body(_, carry):
+        prev, cur, h = carry
+        h = ef_quantize(cur, h, wire_dtype)
+        nxt = (1.0 + eta) * (cur + _mix_once(L, h) - h) - eta * prev
+        return (cur, nxt, h)
+
+    _, out, err_out = jax.lax.fori_loop(0, K, body, (S, S, err))
+    return out, err_out
+
+
 @functools.partial(jax.jit, static_argnames=("K",))
 def naive_mix(S: jax.Array, L: jax.Array, K: int) -> jax.Array:
     """K rounds of plain gossip ``S <- L S`` (Xiao & Boyd 2004 baseline)."""

@@ -34,7 +34,12 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-Carry = Tuple[jax.Array, jax.Array, jax.Array]   # (S, W, G_prev)
+#: ``(S, W, G_prev)`` plus the step-dependent optional slots, in order:
+#: ``W_prev`` (momentum history, ``accelerated=True``) then ``ef`` (the
+#: error-feedback wire residual, ``ef_wire=True``).  Use
+#: :meth:`PowerStep.carry_slots` / :meth:`PowerStep.normalize_carry` rather
+#: than assuming length 3.
+Carry = Tuple[jax.Array, ...]
 
 
 def sign_adjust(W: jax.Array, W0: jax.Array) -> jax.Array:
@@ -66,7 +71,8 @@ def qr_orth(S: jax.Array) -> jax.Array:
     return _impl(S)
 
 
-def rebase_carry(ops, W: jax.Array) -> Carry:
+def rebase_carry(ops, W: jax.Array, *, accelerated: bool = False,
+                 ef_wire: bool = False) -> Carry:
     """Tracker restart: ``S := G_prev := A_j W_j`` on the *current* operators.
 
     Re-establishes Lemma 2's ``mean(S) == mean(G)`` invariant for the
@@ -78,9 +84,39 @@ def rebase_carry(ops, W: jax.Array) -> Carry:
     restarts on abrupt data drift) — carrying the old ``S``/``G_prev``
     across either discontinuity would freeze the stale mean mismatch into a
     permanent bias floor.
+
+    ``accelerated``/``ef_wire`` append the matching extra slots *zeroed*:
+    the momentum history ``W_prev`` references the pre-discontinuity
+    population and the EF residual compensates sends that never happened on
+    the new graph — both are stale noise after a restart, so the first
+    post-restart step degrades to a plain, uncompensated power step.
     """
     G0 = ops.apply(W)
-    return (G0, W, G0)
+    carry: Carry = (G0, W, G0)
+    if accelerated:
+        carry = carry + (jnp.zeros_like(G0),)
+    if ef_wire:
+        carry = carry + (jnp.zeros_like(G0),)
+    return carry
+
+
+def split_state(state) -> Tuple[Carry, Optional[jax.Array]]:
+    """Split a resumable state ``(carry..., offset?)`` into its parts.
+
+    The resumable-state contract appends a shape-``(2,)`` int32
+    ``[comm_rounds, iters]`` offset after the carry slots; since the carry
+    itself is variable-length (momentum / EF extras), the offset is
+    identified structurally as the *trailing* 1-D length-2 integer array
+    rather than positionally.  Returns ``(carry_tuple, offset_or_None)``.
+    """
+    import numpy as np
+    state = tuple(state)
+    last = state[-1] if state else None
+    if last is not None and getattr(last, "ndim", None) == 1 \
+            and tuple(last.shape) == (2,) \
+            and np.issubdtype(last.dtype, np.integer):
+        return state[:-1], last
+    return state, None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,43 +130,95 @@ class PowerStep:
       increasing: iteration ``t`` (global, resume-aware) gossips with
         ``rounds + t`` rounds instead of ``rounds`` (DePCA's practical fix
         for its consensus floor; forces the unrolled substrate).
+      accelerated: momentum-accelerated power iterations — the QR input
+        becomes ``S_new - momentum * W_prev`` (the previous *orthonormal*
+        iterate, carried in an extra ``W_prev`` slot).  Momentum acts
+        purely on the local orthonormalization input, so the gossiped
+        tracking variable — and Lemma 2's ``mean(S) == mean(G)``
+        invariant — is untouched and no extra bytes hit the wire.
+      momentum: the momentum coefficient beta; the noisy-power-method
+        optimum is ``lambda_{k+1}^2 / 4``.  Ignored unless ``accelerated``.
+      ef_wire: carry a per-agent error-feedback residual (extra ``ef``
+        slot) for the engine's quantized wire modes (``wire_dtype=
+        "int8"|"fp8"``); the residual telescopes the quantization bias away
+        across iterations instead of flooring accuracy at the wire
+        precision.  The step only *routes* the slot — the EF arithmetic
+        lives at the :func:`repro.kernels.fastmix.ef_quantize` site inside
+        the engine's mix.
       name: algorithm label (``"DeEPCA"`` / ``"DePCA"``).
     """
 
     track: bool
     rounds: int
     increasing: bool = False
+    accelerated: bool = False
+    momentum: float = 0.0
+    ef_wire: bool = False
     name: str = "DeEPCA"
 
     @classmethod
     def for_algorithm(cls, algorithm: str, K: int,
-                      increasing_consensus: bool = False) -> "PowerStep":
+                      increasing_consensus: bool = False,
+                      accelerated: bool = False, momentum: float = 0.0,
+                      ef_wire: bool = False) -> "PowerStep":
         """The deepca/depca step selector (mirror of the engine selectors)."""
         if algorithm == "deepca":
             if increasing_consensus:
                 raise ValueError("deepca does not use increasing consensus "
                                  "(K is eps-independent — Thm. 1)")
-            return cls(track=True, rounds=K, name="DeEPCA")
+            return cls(track=True, rounds=K, accelerated=accelerated,
+                       momentum=momentum, ef_wire=ef_wire, name="DeEPCA")
         if algorithm == "depca":
             return cls(track=False, rounds=K,
-                       increasing=increasing_consensus, name="DePCA")
+                       increasing=increasing_consensus,
+                       accelerated=accelerated, momentum=momentum,
+                       ef_wire=ef_wire, name="DePCA")
         raise ValueError(f"unknown algorithm {algorithm!r}")
 
     def rounds_at(self, t: int) -> int:
         """Gossip rounds for (global) iteration ``t``."""
         return self.rounds + t if self.increasing else self.rounds
 
+    @property
+    def carry_slots(self) -> int:
+        """Number of arrays in this step's carry: 3 base slots plus
+        ``W_prev`` (accelerated) plus ``ef`` (EF wire), in that order."""
+        return 3 + int(self.accelerated) + int(self.ef_wire)
+
+    def normalize_carry(self, carry: Carry) -> Carry:
+        """Coerce a resumed carry to this step's slot layout.
+
+        A legacy 3-slot ``(S, W, G_prev)`` resumed into an accelerated/EF
+        step gets its extra slots synthesized as zeros (the first resumed
+        iteration degrades to a plain power step, exactly like a restart);
+        a carry already at ``carry_slots`` passes through.  Anything else
+        is ambiguous — slots are positional — and raises.
+        """
+        carry = tuple(carry)
+        if len(carry) == self.carry_slots:
+            return carry
+        if len(carry) == 3:
+            zeros = jnp.zeros_like(carry[0])
+            return carry + (zeros,) * (self.carry_slots - 3)
+        raise ValueError(
+            f"cannot resume a {len(carry)}-slot carry into a step with "
+            f"carry_slots={self.carry_slots} (accelerated="
+            f"{self.accelerated}, ef_wire={self.ef_wire}); slot layout is "
+            "positional — rebuild the state with matching step flags")
+
     def init_carry(self, ops, W0: jax.Array, dtype=None) -> Carry:
         """Alg. 1 line 2: ``S^0 = G^0 = W^0`` on every agent.
 
         The carry is uniform across variants — DePCA simply never reads the
         ``S``/``G_prev`` slots — so resume state, checkpointing and the
-        driver's substrates all share one shape.
+        driver's substrates all share one shape.  Accelerated / EF-wire
+        steps append their extra slots zeroed (no momentum history, no
+        residual yet).
         """
         dt = dtype if dtype is not None else jnp.result_type(W0.dtype,
                                                              ops.dtype)
         W = jnp.broadcast_to(W0, (ops.m,) + W0.shape).astype(dt)
-        return (W, W, W)
+        return self.normalize_carry((W, W, W))
 
     def __call__(self, carry: Carry,
                  mix: Callable[[jax.Array, jax.Array, jax.Array], jax.Array],
@@ -141,10 +229,13 @@ class PowerStep:
         """One power iteration — the single definition of the Alg. 1 body.
 
         Args:
-          carry: ``(S, W, G_prev)`` agent-stacked (or local-slice) state.
-          mix: consensus callable ``(S, G, G_prev) -> S_new``; owns both the
-            tracking-or-not decision's arithmetic (via the engine's
-            ``mix_track`` family for ``track=True``) and the gossip rounds.
+          carry: ``(S, W, G_prev[, W_prev][, ef])`` agent-stacked (or
+            local-slice) state, per :meth:`carry_slots`.
+          mix: consensus callable ``(S, G, G_prev) -> S_new`` — or, for
+            ``ef_wire`` steps, ``(S, G, G_prev, ef) -> (S_new, ef_new)``;
+            owns both the tracking-or-not decision's arithmetic (via the
+            engine's ``mix_track`` family for ``track=True``) and the
+            gossip rounds.
           W0: the common initialisation, for Alg. 2 sign adjustment.
           apply_fn: the local power step ``W -> A_j W_j``.
           apply_mix: optional fused half-iteration ``(S, W, G_prev) ->
@@ -156,19 +247,38 @@ class PowerStep:
         Returns:
           ``(new_carry, (S_new, W_new))`` — scan-body shaped.
         """
-        S, W, G_prev = carry
-        if apply_mix is not None and self.track:
+        carry = tuple(carry)
+        S, W, G_prev = carry[:3]
+        extras = carry[3:]
+        W_prev = extras[0] if self.accelerated else None
+        ef = extras[-1] if self.ef_wire else None
+        if apply_mix is not None and self.track and ef is None:
             S_new, G = apply_mix(S, W, G_prev)    # fused Eqns. apply+(3.1)+(3.2)
         else:
             G = apply_fn(W)                   # A_j W_j^t   (local compute)
-            S_new = mix(S, G, G_prev)         # Eqns. (3.1)+(3.2) fused in mix
-        W_new = sign_adjust(qr_orth(S_new), W0)   # Eqn. (3.3) + Alg. 2
-        return (S_new, W_new, G), (S_new, W_new)
+            if ef is None:
+                S_new = mix(S, G, G_prev)     # Eqns. (3.1)+(3.2) fused in mix
+            else:
+                S_new, ef = mix(S, G, G_prev, ef)   # + EF residual update
+        # Accelerated variant: momentum acts only on the QR *input* — the
+        # carried S stays the gossiped iterate, so subspace tracking and
+        # the consensus invariant are exactly the unaccelerated ones.
+        Y = S_new - self.momentum * W_prev if self.accelerated else S_new
+        W_new = sign_adjust(qr_orth(Y), W0)       # Eqn. (3.3) + Alg. 2
+        new_extras = ((W,) if self.accelerated else ()) \
+            + ((ef,) if self.ef_wire else ())
+        return (S_new, W_new, G) + new_extras, (S_new, W_new)
 
     def make_mix(self, engine, rounds: int = None):
         """Stacked-form ``mix`` callable for one iteration on a static
-        :class:`~repro.core.consensus.ConsensusEngine`."""
+        :class:`~repro.core.consensus.ConsensusEngine`.  For ``ef_wire``
+        steps the callable takes/returns the EF residual as well."""
         r = self.rounds if rounds is None else rounds
+        if self.ef_wire:
+            if self.track:
+                return lambda S, G, G_prev, ef: engine.mix_track(
+                    S, G, G_prev, rounds=r, ef=ef)
+            return lambda S, G, G_prev, ef: engine.mix(G, rounds=r, ef=ef)
         if self.track:
             return lambda S, G, G_prev: engine.mix_track(S, G, G_prev,
                                                          rounds=r)
@@ -178,6 +288,12 @@ class PowerStep:
         """Traced-operand ``mix`` for one scan step on a
         :class:`~repro.core.consensus.DynamicConsensusEngine`."""
         r = self.rounds if rounds is None else rounds
+        if self.ef_wire:
+            if self.track:
+                return lambda S, G, G_prev, ef: dynamic.mix_track_traced(
+                    S, G, G_prev, L, eta, rounds=r, ef=ef)
+            return lambda S, G, G_prev, ef: dynamic.mix_traced(
+                G, L, eta, rounds=r, ef=ef)
         if self.track:
             return lambda S, G, G_prev: dynamic.mix_track_traced(
                 S, G, G_prev, L, eta, rounds=r)
@@ -186,8 +302,10 @@ class PowerStep:
     def make_apply_mix(self, engine, ops, rounds: int = None):
         """Fused ``apply_mix`` callable for one iteration on a static
         engine, or ``None`` for non-tracking steps (DePCA gossips the raw
-        power step; there is nothing to fuse the apply *into*)."""
-        if not self.track:
+        power step; there is nothing to fuse the apply *into*) and for
+        EF-wire steps (the EF residual threads through the two-call
+        composition; the dense apply→track→mix kernel has no EF mirror)."""
+        if not self.track or self.ef_wire:
             return None
         r = self.rounds if rounds is None else rounds
         return lambda S, W, G_prev: engine.apply_mix_track(S, W, G_prev,
@@ -196,8 +314,8 @@ class PowerStep:
     def make_apply_mix_traced(self, dynamic, ops, L, eta,
                               rounds: int = None):
         """Traced-operand ``apply_mix`` for one scan step on a dynamic
-        engine (``None`` for non-tracking steps)."""
-        if not self.track:
+        engine (``None`` for non-tracking and EF-wire steps)."""
+        if not self.track or self.ef_wire:
             return None
         r = self.rounds if rounds is None else rounds
         return lambda S, W, G_prev: dynamic.apply_mix_track_traced(

@@ -82,18 +82,106 @@ def default_block_n(shape=None, dtype=jnp.float32) -> int:
                             default=DEFAULT_BLOCK_N)
 
 
+#: Wire payload bytes per element for each wire mode (``None`` = full
+#: fp32).  The int8 payload is 1 byte/element plus one fp32 scale per agent
+#: per round — accounted separately in the engines' ``bytes_per_round``.
+WIRE_ITEMSIZE = {None: 4, "bf16": 2, "int8": 1, "fp8": 1}
+
+#: Wire modes coarse enough to *require* the error-feedback wire state (the
+#: ``PowerStep`` ``ef`` carry slot holding each agent's replica): their
+#: plain round-trip error is O(1e-2)-scale and would floor tan-theta
+#: without the difference-quantized EF send (:func:`ef_quantize`).
+EF_WIRE_DTYPES = ("int8", "fp8")
+
+
 def quantize_wire(x: jax.Array, wire_dtype=jnp.bfloat16) -> jax.Array:
-    """Round-trip through the wire dtype: THE bf16 wire-precision compute
-    site.
+    """Round-trip through the wire dtype: THE wire-precision compute site.
 
     Emulates reduced-precision gossip: the value an agent *sends* each
-    round is rounded to ``wire_dtype`` (halving wire bytes for bf16), while
-    every receiver keeps accumulating in the full compute dtype.  Both the
-    per-round stacked reference (:func:`repro.core.mixing.fastmix_wire`)
-    and the fused kernels' ``wire_bf16`` path quantize through this exact
-    rounding, so they agree to fp32 round-off.
+    round is rounded to the wire dtype, while every receiver keeps
+    accumulating in the full compute dtype.  Both the per-round stacked
+    references (:func:`repro.core.mixing.fastmix_wire` /
+    ``fastmix_wire_ef``) and the fused kernels' wire paths quantize
+    through this exact rounding, so they agree to fp32 round-off.
+
+    Modes (``wire_dtype`` may be a dtype or one of the engine's mode
+    strings):
+
+    * ``bf16`` / ``jnp.bfloat16`` — plain truncation round-trip (2 B/elem);
+    * ``"fp8"`` — ``float8_e4m3fn`` round-trip (1 B/elem, +-448 range,
+      ~2^-4 relative rounding; scale-free, so it mirrors elementwise
+      inside the Pallas kernels);
+    * ``"int8"`` — symmetric linear quantization with a *per-agent*
+      dynamic scale ``absmax / 127`` over the trailing axes (1 B/elem +
+      one fp32 scale per agent).  The scale floor at the dtype's smallest
+      normal keeps zero and subnormal inputs exact/NaN-free.
+
+    int8/fp8 are coarse enough that plain round-tripping floors accuracy;
+    the engines pair them with the difference-quantized EF send
+    (:func:`ef_quantize`), which quantizes the *innovation* against a
+    carried replica so the injected noise vanishes with convergence.
     """
+    if wire_dtype == "int8" or wire_dtype is jnp.int8:
+        axes = tuple(range(1, x.ndim)) if x.ndim > 1 else (0,)
+        absmax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+        scale = jnp.maximum(absmax / 127.0, jnp.finfo(x.dtype).tiny)
+        q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+        return q.astype(x.dtype) * scale
+    if wire_dtype == "fp8":
+        # e4m3fn has no inf: an out-of-range cast yields NaN, so the wire
+        # saturates at the format max (+-448) instead — matching hardware
+        # fp8 semantics and keeping divergent iterates finite.
+        lim = float(jnp.finfo(jnp.float8_e4m3fn).max)
+        x = jnp.clip(x, -lim, lim)
+        wire_dtype = jnp.float8_e4m3fn
+    elif wire_dtype == "bf16":
+        wire_dtype = jnp.bfloat16
     return x.astype(wire_dtype).astype(x.dtype)
+
+
+def ef_quantize(x: jax.Array, h: jax.Array, wire_dtype) -> jax.Array:
+    """Difference-quantized EF send: THE quantized-gossip EF site.
+
+    CHOCO-style replica tracking (Koloskova et al.): each agent keeps —
+    and every receiver reconstructs, so nothing extra travels — a wire
+    replica ``h`` of its iterate.  One send transmits the quantized
+    *innovation* and both sides advance the replica:
+
+        h_new = h + quantize_wire(x - h)
+
+    This IS error feedback with the residual carried implicitly: the
+    quantization leftover ``x - h_new`` is exactly what the next send's
+    innovation re-injects (``x' - h_new = (x' - x) + (x - h_new)``), so
+    one carry slot (the ``PowerStep`` ``ef`` slot, zeros on the first
+    call / after a restart) covers both the replica and the residual.
+    Because the int8/fp8 quantizers are *relative* (dynamic per-agent
+    scale / elementwise exponent), the injected noise is proportional to
+    the innovation — which vanishes at the algorithm's linear rate — so
+    the quantized wire converges exactly instead of flooring at the wire
+    precision the way a plain round-tripped send does.
+
+    The ``"fp8"`` innovation rides the wire *cube-root companded* —
+    ``fp8(cbrt(delta))`` on the wire, cubed back by the receiver.
+    ``e4m3fn``'s native window (smallest subnormal ``2^-9`` to max 448) is
+    far too narrow for a signal that starts O(1) and shrinks to the f64
+    envelope: un-companded, the innovation underflows to zero once it drops
+    below ~2e-3 and tan-theta floors near 1e-4 (and any fixed pre-gain
+    that rebrases the window low enough saturates the early rounds into
+    divergence on some grids).  Cube-rooting expands the representable
+    dynamic range cubically — underflow at ``2^-27`` (~7.5e-9), overflow
+    not until ``448^3`` (~9e7) — at a worst-case relative step of
+    ``3 * 2^-4 ≈ 19%``, which EF absorbs like any relative quantizer: the
+    noise stays proportional to the vanishing innovation.  The transform
+    is static, elementwise and sign-preserving, so it costs zero wire
+    bytes and mirrors exactly inside the fused kernels.  int8's dynamic
+    per-agent scale needs no companding.
+
+    Returns ``h_new``: the value receivers mix *and* the carried state.
+    """
+    if wire_dtype == "fp8":
+        fq = quantize_wire(jnp.cbrt(x - h), wire_dtype)
+        return h + fq * fq * fq
+    return h + quantize_wire(x - h, wire_dtype)
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -130,12 +218,51 @@ def _rounds(L, prev, cur, eta, K: int, wire_bf16: bool):
     return cur
 
 
+def _rounds_ef(L, prev, cur, h, eta, K: int):
+    """K unrolled Chebyshev rounds over the fp8 difference-quantized wire.
+
+    The in-kernel mirror of :func:`ef_quantize` for ``wire="fp8"``: the
+    replica update is purely elementwise, so it tiles exactly like the
+    bf16 mirror in :func:`_rounds` — no cross-tile state.  (int8 has *no*
+    in-kernel mirror: its per-agent scale is a full-row reduction the
+    column-tiled kernels cannot see; the engines run the per-round
+    stacked reference for int8 instead.)  The receiver combine is the
+    mean-preserving CHOCO form ``cur + (L - I) h``: the correction term
+    has zero agent-mean under the doubly-stochastic ``L``, so wire
+    quantization cannot bias the tracked mean (Lemma 2's invariant).
+    ``prev``/``cur``/``h`` stay fp32; only the innovation is quantized,
+    riding the wire cube-root companded exactly as in :func:`ef_quantize`.
+    """
+    lim = float(jnp.finfo(jnp.float8_e4m3fn).max)
+    for _ in range(K):
+        # companded send: fp8(cbrt(delta)), cubed back on receipt.  The
+        # clip only guards the e4m3fn no-inf cast (it binds at 448^3).
+        f = jnp.clip(jnp.cbrt(cur - h), -lim, lim)
+        fq = f.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+        h = h + fq * fq * fq
+        mixed = cur + jax.lax.dot_general(
+            L, h, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) - h
+        prev, cur = cur, (1.0 + eta) * mixed - eta * prev
+    return cur, h
+
+
 def _fastmix_kernel(eta_ref, l_ref, x_ref, o_ref, *, K: int,
                     wire_bf16: bool):
     """One column tile: run all K rounds with prev/cur resident in VMEM."""
     eta = eta_ref[0, 0]
     prev = x_ref[...].astype(jnp.float32)
     o_ref[...] = _rounds(l_ref[...], prev, prev, eta, K, wire_bf16)
+
+
+def _fastmix_ef_kernel(eta_ref, l_ref, x_ref, e_ref, o_ref, eo_ref, *,
+                       K: int):
+    """One column tile of fp8-EF gossip: iterate + wire replica in, out."""
+    eta = eta_ref[0, 0]
+    prev = x_ref[...].astype(jnp.float32)
+    h = e_ref[...].astype(jnp.float32)
+    o_ref[...], eo_ref[...] = _rounds_ef(l_ref[...], prev, prev, h,
+                                         eta, K)
 
 
 def _block_n_for(S, block_n: Optional[int]) -> int:
@@ -215,6 +342,78 @@ def _fastmix_fused(S: jax.Array, L: jax.Array, eta, K: int, *,
         interpret=interpret,
     )(eta_p, l_p, x_p)
     return out[:m, :n].reshape(S.shape)
+
+
+def fastmix_ef_fused(S: jax.Array, err: jax.Array, L: jax.Array, eta,
+                     K: int, *, wire: str = "fp8",
+                     block_n: Optional[int] = None,
+                     interpret: bool = False):
+    """All K EF-quantized FastMix rounds in one Pallas launch.
+
+    The fp8 twin of :func:`fastmix_fused`: each round sends the
+    ``float8_e4m3fn``-quantized innovation against the per-agent wire
+    replica ``err`` (the in-kernel :func:`ef_quantize` mirror — purely
+    elementwise and therefore tile-local), carried alongside the
+    iterate.  Only ``wire="fp8"`` has an in-kernel mirror — int8's
+    per-agent scale is a cross-tile reduction, so the engines route int8
+    through the per-round stacked reference
+    (:func:`repro.core.mixing.fastmix_wire_ef`) instead.
+
+    Returns ``(S_out, err_out)``, both fp32, same logical shapes as in.
+    """
+    if wire != "fp8":
+        raise ValueError(
+            f"fastmix_ef_fused supports wire='fp8' only (got {wire!r}); "
+            "int8's per-agent scale needs a full-row reduction — use the "
+            "per-round reference repro.core.mixing.fastmix_wire_ef")
+    if S.shape != err.shape:
+        raise ValueError(f"S/err shapes must match; got {S.shape}, "
+                         f"{err.shape}")
+    return _fastmix_ef_fused(S, err, L, eta, K,
+                             block_n=_block_n_for(S, block_n),
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "block_n", "interpret"))
+def _fastmix_ef_fused(S: jax.Array, err: jax.Array, L: jax.Array, eta,
+                      K: int, *, block_n: int, interpret: bool):
+    if K <= 0:
+        return S.astype(jnp.float32), err.astype(jnp.float32)
+    m = S.shape[0]
+    if L.shape != (m, m):
+        raise ValueError(f"L must be ({m}, {m}) for S {S.shape}; "
+                         f"got {L.shape}")
+    n = 1
+    for s in S.shape[1:]:
+        n *= s
+    mp = _round_up(m, 8 if interpret else 128)
+    bn = _round_up(min(block_n, n), 128)
+    npad = _round_up(n, bn)
+
+    def _pad(x):
+        return jnp.pad(x.reshape(m, n).astype(jnp.float32),
+                       ((0, mp - m), (0, npad - n)))
+
+    l_p = jnp.pad(L.astype(jnp.float32), ((0, mp - m), (0, mp - m)))
+    eta_p = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    tile = pl.BlockSpec((mp, bn), lambda j: (0, j))
+
+    out, err_out = pl.pallas_call(
+        functools.partial(_fastmix_ef_kernel, K=int(K)),
+        grid=(npad // bn,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j: (0, 0),
+                         memory_space=pltpu.SMEM),      # eta: traced scalar
+            pl.BlockSpec((mp, mp), lambda j: (0, 0)),   # L: resident
+            tile, tile,                                 # S, err tiles
+        ],
+        out_specs=(tile, tile),
+        out_shape=(jax.ShapeDtypeStruct((mp, npad), jnp.float32),
+                   jax.ShapeDtypeStruct((mp, npad), jnp.float32)),
+        interpret=interpret,
+    )(eta_p, l_p, _pad(S), _pad(err))
+    return (out[:m, :n].reshape(S.shape),
+            err_out[:m, :n].reshape(S.shape))
 
 
 def _fastmix_track_kernel(eta_ref, l_ref, s_ref, g_ref, gp_ref, o_ref, *,
@@ -297,6 +496,88 @@ def _fastmix_track_fused(S: jax.Array, G: jax.Array, G_prev: jax.Array,
         interpret=interpret,
     )(eta_p, l_p, _pad(S), _pad(G), _pad(G_prev))
     return out[:m, :n].reshape(S.shape)
+
+
+def _fastmix_track_ef_kernel(eta_ref, l_ref, s_ref, g_ref, gp_ref, e_ref,
+                             o_ref, eo_ref, *, K: int):
+    """One column tile of fused tracking + fp8-EF gossip."""
+    eta = eta_ref[0, 0]
+    s = s_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    gp = gp_ref[...].astype(jnp.float32)
+    h = e_ref[...].astype(jnp.float32)
+    prev = s + g - gp            # in-register Eqn. (3.1); mirrors tracking_update
+    o_ref[...], eo_ref[...] = _rounds_ef(l_ref[...], prev, prev, h,
+                                         eta, K)
+
+
+def fastmix_track_ef_fused(S: jax.Array, G: jax.Array, G_prev: jax.Array,
+                           err: jax.Array, L: jax.Array, eta, K: int, *,
+                           wire: str = "fp8",
+                           block_n: Optional[int] = None,
+                           interpret: bool = False):
+    """Fused subspace tracking + K fp8-EF-quantized FastMix rounds.
+
+    Semantically ``fastmix_wire_ef(tracking_update(S, G, G_prev), err, L,
+    eta, K, "fp8")`` in one launch, with the tracked iterate and the EF
+    wire replica both formed/updated tile-by-tile in VMEM.  Same fp8-only
+    contract as :func:`fastmix_ef_fused`.  Returns ``(S_new, err_out)``.
+    """
+    if wire != "fp8":
+        raise ValueError(
+            f"fastmix_track_ef_fused supports wire='fp8' only (got "
+            f"{wire!r}); int8 routes through the per-round reference")
+    if not (S.shape == G.shape == G_prev.shape == err.shape):
+        raise ValueError("S/G/G_prev/err shapes must match; got "
+                         f"{S.shape}, {G.shape}, {G_prev.shape}, "
+                         f"{err.shape}")
+    return _fastmix_track_ef_fused(S, G, G_prev, err, L, eta, K,
+                                   block_n=_block_n_for(S, block_n),
+                                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "block_n", "interpret"))
+def _fastmix_track_ef_fused(S: jax.Array, G: jax.Array, G_prev: jax.Array,
+                            err: jax.Array, L: jax.Array, eta, K: int, *,
+                            block_n: int, interpret: bool):
+    m = S.shape[0]
+    if L.shape != (m, m):
+        raise ValueError(f"L must be ({m}, {m}) for S {S.shape}; "
+                         f"got {L.shape}")
+    if K <= 0:
+        return (tracking_update(S, G, G_prev).astype(jnp.float32),
+                err.astype(jnp.float32))
+    n = 1
+    for s_ in S.shape[1:]:
+        n *= s_
+    mp = _round_up(m, 8 if interpret else 128)
+    bn = _round_up(min(block_n, n), 128)
+    npad = _round_up(n, bn)
+
+    def _pad(x):
+        return jnp.pad(x.reshape(m, n).astype(jnp.float32),
+                       ((0, mp - m), (0, npad - n)))
+
+    l_p = jnp.pad(L.astype(jnp.float32), ((0, mp - m), (0, mp - m)))
+    eta_p = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    tile = pl.BlockSpec((mp, bn), lambda j: (0, j))
+
+    out, err_out = pl.pallas_call(
+        functools.partial(_fastmix_track_ef_kernel, K=int(K)),
+        grid=(npad // bn,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j: (0, 0),
+                         memory_space=pltpu.SMEM),      # eta: traced scalar
+            pl.BlockSpec((mp, mp), lambda j: (0, 0)),   # L: resident
+            tile, tile, tile, tile,             # S, G, G_prev, err tiles
+        ],
+        out_specs=(tile, tile),
+        out_shape=(jax.ShapeDtypeStruct((mp, npad), jnp.float32),
+                   jax.ShapeDtypeStruct((mp, npad), jnp.float32)),
+        interpret=interpret,
+    )(eta_p, l_p, _pad(S), _pad(G), _pad(G_prev), _pad(err))
+    return (out[:m, :n].reshape(S.shape),
+            err_out[:m, :n].reshape(S.shape))
 
 
 @functools.partial(jax.jit, static_argnames=("K",))

@@ -87,15 +87,36 @@ def serve_pca(args) -> None:
     problems, W0 = synthetic_problem_batch(
         B, m, d, k, n_per_agent=args.n_per_agent, seed=args.seed)
 
-    wire = "bf16" if args.wire_bf16 else None
+    from repro.core.algorithms import resolve_acceleration
+    from repro.core.consensus import EF_WIRE_DTYPES
+
+    wire = args.wire_dtype if args.wire_dtype is not None \
+        else ("bf16" if args.wire_bf16 else None)
+    if wire in ("none", "fp32"):
+        wire = None
     engine = ConsensusEngine.for_algorithm("deepca", topo, K=args.rounds,
                                            backend="stacked",
                                            wire_dtype=wire)
     if wire:
-        print("[serve] gossip wire precision: bf16 "
-              "(fp32 tracking/QR accumulation)")
+        ef = " + error feedback" if wire in EF_WIRE_DTYPES else ""
+        print(f"[serve] gossip wire precision: {wire}{ef} "
+              "(fp32 tracking/QR accumulation); "
+              f"{engine.bytes_per_round(d, k)} B/agent/round")
+    accelerated, momentum = resolve_acceleration(
+        True if args.accel else None, args.momentum)
+    if accelerated:
+        print(f"[serve] accelerated power iterations (momentum="
+              f"{momentum:g})")
     driver = IterationDriver(step=PowerStep.for_algorithm(
-        "deepca", args.rounds), engine=engine)
+        "deepca", args.rounds, accelerated=accelerated, momentum=momentum,
+        ef_wire=engine.ef_wire), engine=engine)
+
+    if args.profile_stages:
+        stages = driver.profile_stages(problems[0], W0[0])
+        total = sum(stages.values())
+        parts = " ".join(f"{s}={us:.0f}us({100 * us / total:.0f}%)"
+                         for s, us in stages.items())
+        print(f"[serve] per-stage wall clock: {parts}")
 
     out = driver.run_batch(problems, W0, T=args.iters)     # compile + warm
     jax.block_until_ready(out.W)
@@ -131,10 +152,16 @@ def serve_pca_stream(args) -> None:
     # --- 1. online tracker over a drifting stream (prefetched ingest) ----
     stream = SlowRotationStream(m=m, d=d, k=k, n_per_agent=args.n_per_agent,
                                 rate=args.drift_rate, seed=args.seed)
+    wire = args.wire_dtype if args.wire_dtype is not None \
+        else ("bf16" if args.wire_bf16 else None)
+    if wire in ("none", "fp32"):
+        wire = None
     tracker = StreamingDeEPCA(
         k=k, T_tick=args.tick_iters, K=args.rounds, topology=topo,
         backend="stacked", W0=stream.init_W0(),
-        policy=DriftPolicy(target=args.target))
+        policy=DriftPolicy(target=args.target),
+        accelerated=args.accel or None, momentum=args.momentum,
+        wire_dtype=wire)
     print(f"[stream] m={m} d={d} k={k} rate={args.drift_rate}/tick "
           f"T_tick={args.tick_iters} K={args.rounds} target={args.target}")
     t0 = time.perf_counter()
@@ -198,7 +225,21 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=6, help="FastMix rounds K")
     ap.add_argument("--wire-bf16", action="store_true",
                     help="gossip iterates travel in bf16 (tracking/QR stay "
-                         "fp32); see README 'Performance'")
+                         "fp32); shorthand for --wire-dtype bf16")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["none", "fp32", "bf16", "int8", "fp8"],
+                    help="gossip wire precision; int8/fp8 add error "
+                         "feedback (see README 'Wire modes'); default: "
+                         "$REPRO_WIRE_DTYPE or fp32")
+    ap.add_argument("--accel", action="store_true",
+                    help="momentum-accelerated power iterations "
+                         "(see README 'Acceleration')")
+    ap.add_argument("--momentum", type=float, default=None,
+                    help="momentum coefficient for --accel "
+                         "(default: $REPRO_ACCEL or 0.25)")
+    ap.add_argument("--profile-stages", action="store_true",
+                    help="measure per-stage (apply/mix/orth) wall clock "
+                         "once before serving; emits 'stage' telemetry")
     ap.add_argument("--reps", type=int, default=10, help="timed launches")
     # --workload pca-stream knobs
     ap.add_argument("--ticks", type=int, default=8, help="stream ticks")

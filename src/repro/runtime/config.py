@@ -44,12 +44,24 @@ ENV_AUTOTUNE = "REPRO_AUTOTUNE"
 ENV_AUTOTUNE_CACHE = "REPRO_AUTOTUNE_CACHE"
 #: Default telemetry sink spec ('null' | 'log' | 'jsonl:PATH').
 ENV_TELEMETRY = "REPRO_TELEMETRY"
+#: Default gossip wire precision ('none'/'fp32' | 'bf16' | 'int8' | 'fp8').
+ENV_WIRE_DTYPE = "REPRO_WIRE_DTYPE"
+#: Accelerated (momentum) power iterations: 'off'/'0' | 'on'/'1' (default
+#: momentum) | a float momentum value.
+ENV_ACCEL = "REPRO_ACCEL"
 
 #: Every env var this module owns, in field order of :class:`RuntimeConfig`.
 ENV_VARS: Tuple[str, ...] = (ENV_QR_IMPL, ENV_FASTMIX_BLOCK_N, ENV_AUTOTUNE,
-                             ENV_AUTOTUNE_CACHE, ENV_TELEMETRY)
+                             ENV_AUTOTUNE_CACHE, ENV_TELEMETRY,
+                             ENV_WIRE_DTYPE, ENV_ACCEL)
 
 QR_IMPLS = ("cholqr2", "householder")
+WIRE_DTYPES = ("bf16", "int8", "fp8")
+#: Momentum used when acceleration is requested as a bare flag.  The
+#: optimum is problem-dependent (beta* ~ lambda_{k+1}^2 / 4 for the power
+#: method); 0.25 is the spectrum-agnostic setting that is safe whenever
+#: lambda_{k+1} <= 1 after normalization.
+DEFAULT_MOMENTUM = 0.25
 
 _XLA_FLAGS = "XLA_FLAGS"
 _HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
@@ -80,6 +92,40 @@ def _parse_positive_int(raw: Optional[str], env: str) -> Optional[int]:
     if val <= 0:
         raise ValueError(f"{env} must be a positive integer, got {raw!r}")
     return val
+
+
+def _parse_wire_dtype(raw: Optional[str]) -> Optional[str]:
+    if raw is None:
+        return None
+    val = raw.strip().lower()
+    if val in ("", "none", "fp32", "f32", "full"):
+        return None
+    if val not in WIRE_DTYPES:
+        raise ValueError(
+            f"{ENV_WIRE_DTYPE} must be one of none/fp32/{'/'.join(WIRE_DTYPES)}, "
+            f"got {raw!r}")
+    return val
+
+
+def _parse_accel(raw: Optional[str]) -> Optional[float]:
+    """``None`` = acceleration off; a float = the momentum to use."""
+    if raw is None:
+        return None
+    val = raw.strip().lower()
+    if val in _FALSE:
+        return None
+    if val in _TRUE:
+        return DEFAULT_MOMENTUM
+    try:
+        beta = float(val)
+    except ValueError as e:
+        raise ValueError(
+            f"{ENV_ACCEL} must be a boolean flag or a momentum in [0, 1), "
+            f"got {raw!r}") from e
+    if not 0.0 <= beta < 1.0:
+        raise ValueError(
+            f"{ENV_ACCEL} momentum must lie in [0, 1), got {raw!r}")
+    return beta if beta > 0.0 else None
 
 
 def _parse_bool(raw: Optional[str], env: str) -> bool:
@@ -114,6 +160,12 @@ class RuntimeConfig:
     autotune_cache: Optional[str] = None
     #: Default telemetry sink spec; ``None`` -> no sink installed.
     telemetry: Optional[str] = None
+    #: Default gossip wire precision for engine construction through
+    #: :func:`repro.core.algorithms.resolve_engines`; ``None`` -> fp32.
+    wire_dtype: Optional[str] = None
+    #: Default accelerated-power-iteration momentum (``None`` -> off); the
+    #: value is the beta used when an entry point does not pass its own.
+    accel: Optional[float] = None
 
     def describe(self) -> Dict[str, Any]:
         """JSON-serializable provenance snapshot: the resolved knobs, the
@@ -154,13 +206,16 @@ def from_env() -> RuntimeConfig:
     Validation is eager across all knobs: one typo'd variable fails every
     consumer loudly rather than just the one that happens to read it.
     """
-    raw_qr, raw_block, raw_auto, raw_cache, raw_tel = _env_snapshot()
+    (raw_qr, raw_block, raw_auto, raw_cache, raw_tel, raw_wire,
+     raw_accel) = _env_snapshot()
     return RuntimeConfig(
         qr_impl=_parse_qr_impl(raw_qr),
         fastmix_block_n=_parse_positive_int(raw_block, ENV_FASTMIX_BLOCK_N),
         autotune=_parse_bool(raw_auto, ENV_AUTOTUNE),
         autotune_cache=raw_cache or None,
         telemetry=raw_tel or None,
+        wire_dtype=_parse_wire_dtype(raw_wire),
+        accel=_parse_accel(raw_accel),
     )
 
 
@@ -193,6 +248,10 @@ def _validate_override(kwargs: Dict[str, Any]) -> Dict[str, Any]:
             out[name] = _parse_positive_int(str(value), ENV_FASTMIX_BLOCK_N)
         elif name == "autotune":
             out[name] = bool(value)
+        elif name == "wire_dtype":
+            out[name] = _parse_wire_dtype(str(value))
+        elif name == "accel":
+            out[name] = _parse_accel(str(value))
         else:
             out[name] = str(value)
     return out
@@ -284,7 +343,9 @@ def configure(*,
               fastmix_block_n: Optional[int] = None,
               autotune: Optional[bool] = None,
               autotune_cache: Optional[str] = None,
-              telemetry: Optional[str] = None) -> RuntimeConfig:
+              telemetry: Optional[str] = None,
+              wire_dtype: Optional[str] = None,
+              accel: Optional[Any] = None) -> RuntimeConfig:
     """One-call process setup: x64 / platform / fake-device-count as
     first-class arguments, plus persistent ``REPRO_*`` knob assignment.
 
@@ -305,7 +366,9 @@ def configure(*,
              (ENV_FASTMIX_BLOCK_N, fastmix_block_n),
              (ENV_AUTOTUNE, autotune),
              (ENV_AUTOTUNE_CACHE, autotune_cache),
-             (ENV_TELEMETRY, telemetry))
+             (ENV_TELEMETRY, telemetry),
+             (ENV_WIRE_DTYPE, wire_dtype),
+             (ENV_ACCEL, accel))
     for env, val in knobs:
         if val is not None:
             if isinstance(val, bool):

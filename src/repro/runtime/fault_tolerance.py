@@ -164,7 +164,7 @@ def kill_agents(ops, state, dead: List[int]):
     """
     import jax.numpy as jnp
     from repro.core.operators import StackedOperators
-    from repro.core.step import rebase_carry
+    from repro.core.step import rebase_carry, split_state
 
     m = ops.m
     keep = jnp.asarray([i for i in range(m) if i not in set(dead)])
@@ -172,11 +172,12 @@ def kill_agents(ops, state, dead: List[int]):
         ops_surv = StackedOperators(dense=ops.dense[keep])
     else:
         ops_surv = StackedOperators(data=ops.data[keep])
-    W = state[1]
-    offset = state[3] if len(state) > 3 else None
-    state_surv = rebase_carry(ops_surv, W[keep]) \
-        + (() if offset is None else (offset,))
-    return ops_surv, state_surv
+    carry, offset = split_state(tuple(state))
+    surv = rebase_carry(ops_surv, carry[1][keep])
+    # accelerated/EF extras (momentum history, EF residual) describe the
+    # pre-failure trajectory of a different population — restart them zeroed
+    surv += tuple(jnp.zeros_like(surv[0]) for _ in carry[3:])
+    return ops_surv, surv + (() if offset is None else (offset,))
 
 
 @dataclasses.dataclass
@@ -243,9 +244,13 @@ def deepca_with_failures(ops, topology, W0, *, k: int, T: int, K: int,
         results.append(res)
         state = res.state
         if ckpt is not None:
-            ckpt.save_async(seg_idx + 1, {"S": state[0], "W": state[1],
-                                          "G_prev": state[2],
-                                          "offset": state[3]})
+            from repro.core.step import split_state
+            carry_ck, off_ck = split_state(tuple(state))
+            payload = {"S": carry_ck[0], "W": carry_ck[1],
+                       "G_prev": carry_ck[2], "offset": off_ck}
+            for i, extra in enumerate(carry_ck[3:]):
+                payload[f"extra{i}"] = extra
+            ckpt.save_async(seg_idx + 1, payload)
         if failure is not None:
             topo = degrade_topology(topo, failure.dead,
                                     allow_disconnected=allow_disconnected)

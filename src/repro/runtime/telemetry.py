@@ -18,9 +18,15 @@ event               fields
 ``iteration``       ``source`` ('driver.run'|'driver.run_batch'), ``t``
                     (global iteration index), ``rounds`` (cumulative
                     gossip rounds in the window), ``rate`` (per-iteration
-                    contraction bound); batch runs add ``batch``
+                    contraction bound), ``bytes_on_wire`` (per-agent wire
+                    bytes this iteration sent, from the engine's
+                    ``bytes_per_round`` wire-precision cost model); batch
+                    runs add ``batch``
 ``launch``          ``source``, ``substrate``/``kind``, ``T``, ``warm``
                     (program-cache hit vs fresh trace)
+``stage``           ``source`` ('driver.profile_stages'), ``stage``
+                    ('apply'|'mix'|'orth'), ``us`` (best-of-``iters``
+                    synchronized wall-clock), ``iters``
 ``service.launch``  ``bucket``, ``batch``, ``batch_padded``, ``warm``
                     (from :class:`repro.streaming.service.PCAService`)
 ``stream.tick``     ``tick``, ``iterations``, ``comm_rounds``, ``stat``,
@@ -221,12 +227,23 @@ def sink_from_spec(spec: Optional[str]) -> TelemetrySink:
 
 # ------------------------------------------------------ emission helpers
 def emit_iterations(source: str, t0: int, rounds: Sequence[int],
-                    rates: Sequence[float], **extra: Any) -> None:
+                    rates: Sequence[float],
+                    bytes_per_round: Optional[int] = None,
+                    **extra: Any) -> None:
     """One ``iteration`` event per window entry.  ``rounds`` is the
     window-cumulative gossip-round counter (as carried by ``DriverRun``),
-    ``rates`` the per-iteration contraction bound."""
+    ``rates`` the per-iteration contraction bound.  ``bytes_per_round``
+    (the engine's per-agent wire-precision cost model) adds a
+    ``bytes_on_wire`` field: the bytes this iteration's *delta* of the
+    cumulative round counter put on the wire per agent."""
     if not _SINK.active:
         return
+    prev = 0
     for i, (r, rate) in enumerate(zip(rounds, rates)):
+        fields = dict(extra)
+        if bytes_per_round is not None:
+            fields["bytes_on_wire"] = int(round((int(r) - prev)
+                                                * int(bytes_per_round)))
+        prev = int(r)
         emit("iteration", source=source, t=int(t0) + i, rounds=int(r),
-             rate=float(rate), **extra)
+             rate=float(rate), **fields)

@@ -135,16 +135,25 @@ class StreamingDeEPCA:
     increasing_consensus: bool = False
     policy: DriftPolicy = dataclasses.field(default_factory=DriftPolicy)
     W0: Optional[jax.Array] = None
+    accelerated: Optional[bool] = None    # momentum power iterations
+    momentum: Optional[float] = None      # None -> REPRO_ACCEL / default
+    wire_dtype: Optional[str] = None      # None -> REPRO_WIRE_DTYPE
 
     def __post_init__(self):
+        from repro.core.algorithms import resolve_acceleration
         dyn, eng = resolve_engines(
             self.algorithm, self.topology, self.K, accelerate=self.accelerate,
-            backend=self.backend, engine=self.engine, schedule=self.schedule)
+            backend=self.backend, engine=self.engine, schedule=self.schedule,
+            wire_dtype=self.wire_dtype)
+        accelerated, momentum = resolve_acceleration(self.accelerated,
+                                                     self.momentum)
         step = PowerStep.for_algorithm(
             self.algorithm, self.K,
-            increasing_consensus=self.increasing_consensus)
+            increasing_consensus=self.increasing_consensus,
+            accelerated=accelerated, momentum=momentum,
+            ef_wire=(dyn if dyn is not None else eng).ef_wire)
         self.driver = IterationDriver(step=step, engine=eng, dynamic=dyn)
-        self._carry = None          # (S, W, G_prev) resumable driver carry
+        self._carry = None   # (S, W, G_prev[, W_prev][, ef]) driver carry
         self._rounds = 0.0          # cumulative gossip rounds
         self._iters = 0             # cumulative (global) power iterations
         self._ticks = 0
@@ -161,10 +170,12 @@ class StreamingDeEPCA:
 
     @property
     def state(self) -> Optional[tuple]:
-        """The deepca/depca-compatible resume tuple ``(S, W, G_prev,
-        offset)`` — ``deepca(..., state=tracker.state)`` continues this
-        tracker's round accounting, schedule indexing and increasing-rounds
-        schedule exactly."""
+        """The deepca/depca-compatible resume tuple ``(S, W, G_prev[,
+        W_prev][, ef], offset)`` — ``deepca(..., state=tracker.state)``
+        continues this tracker's round accounting, schedule indexing and
+        increasing-rounds schedule exactly (accelerated/EF extras ride
+        along; the offset stays the structurally-identifiable last
+        element)."""
         if self._carry is None:
             return None
         offset = jnp.asarray([int(round(self._rounds)), self._iters],
@@ -211,9 +222,14 @@ class StreamingDeEPCA:
         :func:`~repro.core.step.rebase_carry` is the same compute site the
         fault-tolerance runtime restarts through
         (``kill_agents(dead=[])`` is this call plus a survivor compaction
-        that would be a full-data no-op copy here)."""
+        that would be a full-data no-op copy here).  Momentum history and
+        the EF residual describe the pre-restart trajectory, so their
+        slots come back zeroed."""
         from repro.core.step import rebase_carry
-        self._carry = rebase_carry(ops, self._carry[1])
+        step = self.driver.step
+        self._carry = rebase_carry(ops, self._carry[1],
+                                   accelerated=step.accelerated,
+                                   ef_wire=step.ef_wire)
 
     # --------------------------------------------------------------- tick
     def tick(self, ops: StackedOperators,

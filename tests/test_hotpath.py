@@ -319,7 +319,7 @@ def test_wire_mode_deepca_converges_to_bf16_floor():
 def test_wire_mode_validation():
     topo = erdos_renyi(4, p=0.9, seed=0)
     with pytest.raises(ValueError, match="wire_dtype"):
-        ConsensusEngine(topo, K=2, wire_dtype="fp8")
+        ConsensusEngine(topo, K=2, wire_dtype="f4")
     with pytest.raises(ValueError, match="shard_map"):
         ConsensusEngine(topo, K=2, backend="shard_map", wire_dtype="bf16")
     with pytest.raises(ValueError, match="shard_map"):
