@@ -139,6 +139,21 @@ COMPUTE_SITES: Tuple[ComputeSite, ...] = (
             "exactly one definition, repro.core.step.rebase_carry, shared "
             "by fault tolerance and the streaming tracker",
     ),
+    ComputeSite(
+        name="diag-observables",
+        pattern="def",
+        definition=("repro/runtime/diagnostics.py", "diag_vector"),
+        allowed=frozenset({
+            ("repro/runtime/diagnostics.py", "diag_vector"),
+        }),
+        doc="the in-graph diagnostic reductions (max-over-agents consensus "
+            "residual, sign-aligned movement, EF residual norm, momentum "
+            "magnitude) must have exactly one definition, "
+            "repro.runtime.diagnostics.diag_vector — every driver "
+            "substrate measures through PowerStep.measure so the observable "
+            "semantics (and the diag-off bit-identity guarantee) cannot "
+            "fork per call site",
+    ),
 )
 
 #: Function names whose *re-definition* outside the registered files is a
@@ -150,6 +165,7 @@ RESERVED_DEFS = {
     "ef_quantize": ("repro/kernels/fastmix.py",),
     "ef_transmit": ("repro/compression/ef.py",),
     "rebase_carry": ("repro/core/step.py",),
+    "diag_vector": ("repro/runtime/diagnostics.py",),
     "qr_orth": ("repro/core/step.py", "repro/kernels/cholqr.py"),
     # kernels/ops.py holds the public delegating wrapper (same seam)
     "cholqr2": ("repro/kernels/cholqr.py", "repro/kernels/ops.py"),

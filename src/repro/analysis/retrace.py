@@ -230,6 +230,31 @@ def _build_driver_run():
     return warmup, steady
 
 
+def _build_diag_run():
+    """Diagnostics-ON warm runs: the measured in-graph observables ride
+    the same cached scan program (cache keyed on the DiagnosticsSpec, so
+    diag-on and diag-off each compile once and then stay warm)."""
+    from repro.core.consensus import ConsensusEngine
+    from repro.core.driver import IterationDriver
+    from repro.core.step import PowerStep
+    from repro.core.topology import ring
+
+    eng = ConsensusEngine(topology=ring(6), K=3, backend="stacked")
+    driver = IterationDriver(step=PowerStep(track=True, rounds=3),
+                             engine=eng, diagnostics="on")
+    ops0, W0 = _mini_problem(m=6, seed=0)
+    ops1, _ = _mini_problem(m=6, seed=5)
+
+    def warmup():
+        driver.run(ops0, W0, T=3)
+
+    def steady():
+        driver.run(ops1, W0, T=3)
+        driver.run(ops0, W0, T=3)
+
+    return warmup, steady
+
+
 CONTRACTS = (
     RetraceContract("dynamic-same-m-swap", _build_dynamic_swap,
                     doc="graph L is a traced operand"),
@@ -241,6 +266,9 @@ CONTRACTS = (
                     doc="batch cache keyed (T, kind, ...), not on data"),
     RetraceContract("driver-run-warm", _build_driver_run,
                     doc="run cache keyed (T, kind)"),
+    RetraceContract("diag-run-warm", _build_diag_run,
+                    doc="diag observables ride the cached scan program "
+                        "(cache keyed (T, kind, spec))"),
 )
 
 

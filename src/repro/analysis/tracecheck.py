@@ -258,7 +258,7 @@ def _build_driver_run(dtype):
     eng = ConsensusEngine(topology=_topology(), K=2, backend="stacked")
     driver = IterationDriver(step=PowerStep(track=True, rounds=2),
                              engine=eng)
-    fn = driver._scan_fn(2, "data")
+    fn, _warm = driver._scan_fn(2, "data")
     ops, W0 = _problem(dtype)
     return fn, (ops.array, W0, _carry(ops, W0))
 

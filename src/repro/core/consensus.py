@@ -102,6 +102,22 @@ EF_WIRE_DTYPES = ("int8", "fp8")
 #: Default mesh-axis name for the shard_map backend.
 AXIS = "agents"
 
+#: Relative per-send rounding floor of each wire mode — the unit roundoff
+#: of one quantized gossip send (fp32 eps, bf16's 8 mantissa bits, int8's
+#: half-step at a per-agent symmetric scale, fp8-e4m3's unit roundoff).
+#: This is the magnitude scale where a *plain* quantized wire stops making
+#: progress; EF wires (:data:`EF_WIRE_DTYPES`) telescope the bias below
+#: it.  Consumed by the engines' :meth:`~ConsensusEngine
+#: .quantization_floor`, stamped on ``diag`` telemetry events, and used
+#: by the health monitor's stalled-movement rule to judge whether a
+#: measured plateau sits at the wire's precision floor.
+WIRE_QUANT_FLOOR = {
+    None: 2.0 ** -23,
+    "bf16": 2.0 ** -8,
+    "int8": 2.0 ** -8,
+    "fp8": 2.0 ** -4,
+}
+
 
 def resolve_backend(backend: str) -> str:
     """Apply the module-level selection rules; returns a concrete backend."""
@@ -403,6 +419,12 @@ class ConsensusEngine:
             n += 4
         return n
 
+    def quantization_floor(self) -> float:
+        """This wire mode's relative per-send rounding floor
+        (:data:`WIRE_QUANT_FLOOR`) — the diag-event / health-rule yardstick
+        for "is this plateau the wire's fault"."""
+        return WIRE_QUANT_FLOOR[self.wire_dtype]
+
     # ------------------------------------------------- stacked-form mixing
     def mix(self, S: jax.Array, rounds: Optional[int] = None, *,
             ef: Optional[jax.Array] = None):
@@ -692,6 +714,11 @@ class DynamicConsensusEngine:
         if self.wire_dtype == "int8":
             n += 4
         return n
+
+    def quantization_floor(self) -> float:
+        """See :meth:`ConsensusEngine.quantization_floor` (wire modes are
+        schedule-independent, so one floor covers the whole window)."""
+        return WIRE_QUANT_FLOOR[self.wire_dtype]
 
     def mix_traced(self, S: jax.Array, L: jax.Array, eta,
                    rounds: Optional[int] = None, *,

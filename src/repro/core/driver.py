@@ -59,7 +59,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.runtime import telemetry
+from repro.runtime import telemetry, tracing
+from repro.runtime import diagnostics as diagnostics_lib
 
 from .consensus import ConsensusEngine, DynamicConsensusEngine
 from .operators import StackedOperators
@@ -100,6 +101,10 @@ class DriverRun(NamedTuple):
     W_hist: jax.Array          # (T, m, d, k) per-iteration estimates
     rounds: np.ndarray         # (T,) cumulative gossip rounds (this window)
     rates: np.ndarray          # (T,) Prop. 1 contraction bound per iteration
+    #: (T, n) measured in-graph observables (diagnostics on) or ``None``
+    diag: Optional[jax.Array] = None
+    #: column labels for ``diag`` — ``DiagnosticsSpec.names(step)``
+    diag_names: Tuple[str, ...] = ()
 
 
 class BatchRun(NamedTuple):
@@ -111,6 +116,8 @@ class BatchRun(NamedTuple):
     S_hist: Optional[jax.Array] = None    # (B, T, m, d, k) when requested
     W_hist: Optional[jax.Array] = None
     extras: Tuple[jax.Array, ...] = ()    # (B, m, d, k) W_prev / ef slots
+    diag: Optional[jax.Array] = None      # (B, T, n) measured observables
+    diag_names: Tuple[str, ...] = ()
 
     @property
     def carries(self) -> Carry:
@@ -124,11 +131,19 @@ class IterationDriver:
     Exactly one of ``engine`` (static topology) / ``dynamic``
     (schedule-driven) must be set; the wrappers in
     :mod:`repro.core.algorithms` build both from their public arguments.
+
+    ``diagnostics`` (a :class:`~repro.runtime.diagnostics.DiagnosticsSpec`,
+    or anything its ``parse`` accepts) opts the compiled scans into
+    stacking the measured in-graph observables per iteration — returned as
+    ``DriverRun.diag`` / ``BatchRun.diag`` and emitted as ``diag``
+    telemetry events.  Off (the default) leaves every program body and
+    cache key exactly as before: bit-identical outputs, zero cost.
     """
 
     step: PowerStep
     engine: Optional[ConsensusEngine] = None
     dynamic: Optional[DynamicConsensusEngine] = None
+    diagnostics: Optional[diagnostics_lib.DiagnosticsSpec] = None
     _batch_cache: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False)
     # per-(substrate, T, kind) cache of jitted single-problem programs:
@@ -142,6 +157,18 @@ class IterationDriver:
             raise ValueError(
                 "exactly one of engine (static) / dynamic (schedule) "
                 "must be provided")
+        if self.diagnostics is not None and not isinstance(
+                self.diagnostics, diagnostics_lib.DiagnosticsSpec):
+            self.diagnostics = diagnostics_lib.DiagnosticsSpec.parse(
+                self.diagnostics)
+
+    def _diag_names(self) -> Tuple[str, ...]:
+        return (self.diagnostics.names(self.step)
+                if self.diagnostics is not None else ())
+
+    def quantization_floor(self) -> float:
+        """The engine's wire quantization floor (attached to diag events)."""
+        return (self.engine or self.dynamic).quantization_floor()
 
     # ------------------------------------------------------------ running
     def run(self, ops: StackedOperators, W0: jax.Array, *, T: int,
@@ -185,13 +212,18 @@ class IterationDriver:
                              "substrate (per-step static round counts)")
         fn = {"scan": self._run_scan, "traced_scan": self._run_traced_scan,
               "unrolled": self._run_unrolled}[substrate]
-        out = fn(ops, W0, carry, T, t0, dt)
-        # DriverRun already carries the paper's observables host-side
-        # (cumulative gossip rounds, per-iteration contraction bound) —
-        # stream them when a sink is installed.
-        telemetry.emit_iterations(
-            "driver.run", t0, out.rounds, out.rates, substrate=substrate,
-            bytes_per_round=self.bytes_per_round(W0))
+        with tracing.span("driver.run", substrate=substrate, T=int(T)):
+            out = fn(ops, W0, carry, T, t0, dt)
+            # DriverRun already carries the paper's observables host-side
+            # (cumulative gossip rounds, per-iteration contraction bound) —
+            # stream them when a sink is installed.
+            telemetry.emit_iterations(
+                "driver.run", t0, out.rounds, out.rates, substrate=substrate,
+                bytes_per_round=self.bytes_per_round(W0))
+            if out.diag is not None and out.diag_names:
+                diagnostics_lib.emit_diag(
+                    "driver.run", t0, out.diag_names, out.diag,
+                    floor=self.quantization_floor(), substrate=substrate)
         return out
 
     def bytes_per_round(self, W0: jax.Array) -> int:
@@ -281,11 +313,14 @@ class IterationDriver:
             return best * 1e6
 
         G = apply_j(W)
-        out = {
-            "apply": best_us(apply_j, W),
-            "mix": best_us(mix_j, S, G, G_prev),
-            "orth": best_us(orth_j, S),
-        }
+        out = {}
+        with tracing.span("driver.profile_stages", iters=int(iters)):
+            with tracing.span("profile.apply"):
+                out["apply"] = best_us(apply_j, W)
+            with tracing.span("profile.mix"):
+                out["mix"] = best_us(mix_j, S, G, G_prev)
+            with tracing.span("profile.orth"):
+                out["orth"] = best_us(orth_j, S)
         for stage, us in out.items():
             telemetry.emit("stage", source="driver.profile_stages",
                            stage=stage, us=us, iters=int(iters))
@@ -297,11 +332,18 @@ class IterationDriver:
                 else StackedOperators(data=arr))
 
     def _scan_fn(self, T: int, kind: str):
-        """Cached jitted static-topology scan over one problem."""
-        key = ("scan", T, kind)
+        """Cached jitted static-topology scan over one problem.
+
+        Returns ``(fn, warm)``.  The diagnostics spec is part of the cache
+        key: diag-on and diag-off are distinct compiled programs, so
+        toggling diagnostics never invalidates (or perturbs) the off path.
+        """
+        spec = self.diagnostics
+        key = ("scan", T, kind, spec)
         fn = self._run_cache.get(key)
+        warm = fn is not None
         telemetry.emit("launch", source="driver.run", substrate="scan",
-                       T=T, kind=kind, warm=fn is not None)
+                       T=T, kind=kind, warm=warm)
         if fn is None:
             step, eng = self.step, self.engine
             mix = step.make_mix(eng)
@@ -311,19 +353,26 @@ class IterationDriver:
                 apply_mix = step.make_apply_mix(eng, ops)
 
                 def body(c, _):
-                    return step(c, mix, W0, ops.apply, apply_mix=apply_mix)
+                    new_c, ys = step(c, mix, W0, ops.apply,
+                                     apply_mix=apply_mix)
+                    if spec is not None:
+                        ys = ys + (step.measure(spec, new_c, c),)
+                    return new_c, ys
 
                 return jax.lax.scan(body, carry, None, length=T)
 
             fn = self._run_cache[key] = jax.jit(scan_fn)
-        return fn
+        return fn, warm
 
     def _traced_scan_fn(self, T: int, kind: str):
-        """Cached jitted dynamic-schedule scan; ``(Ls, etas)`` are traced."""
-        key = ("traced_scan", T, kind)
+        """Cached jitted dynamic-schedule scan; ``(Ls, etas)`` are traced.
+        Returns ``(fn, warm)``; see :meth:`_scan_fn` on the diag key."""
+        spec = self.diagnostics
+        key = ("traced_scan", T, kind, spec)
         fn = self._run_cache.get(key)
+        warm = fn is not None
         telemetry.emit("launch", source="driver.run", substrate="traced_scan",
-                       T=T, kind=kind, warm=fn is not None)
+                       T=T, kind=kind, warm=warm)
         if fn is None:
             step, dyn = self.step, self.dynamic
 
@@ -332,63 +381,84 @@ class IterationDriver:
 
                 def body(c, xs):
                     L_t, eta_t = xs
-                    return step(
+                    new_c, ys = step(
                         c, step.make_mix_traced(dyn, L_t, eta_t), W0,
                         ops.apply,
                         apply_mix=step.make_apply_mix_traced(dyn, ops, L_t,
                                                              eta_t))
+                    if spec is not None:
+                        ys = ys + (step.measure(spec, new_c, c),)
+                    return new_c, ys
 
                 return jax.lax.scan(body, carry, (Ls, etas), length=T)
 
             fn = self._run_cache[key] = jax.jit(scan_fn)
-        return fn
+        return fn, warm
 
     def _run_scan(self, ops, W0, carry, T, t0, dt) -> DriverRun:
         K = self.step.rounds
         kind = "dense" if ops.dense is not None else "data"
-        fn = self._scan_fn(T, kind)
-        carry, (S_hist, W_hist) = fn(ops.array, W0, carry)
+        fn, warm = self._scan_fn(T, kind)
+        with tracing.span("driver.launch", substrate="scan", T=int(T),
+                          warm=warm):
+            carry, ys = fn(ops.array, W0, carry)
+        S_hist, W_hist = ys[0], ys[1]
+        diag = ys[2] if self.diagnostics is not None else None
         rounds = np.arange(1, T + 1, dtype=np.float32) * float(K)
         rates = np.full(T, self.engine.contraction_rate(K), dtype=np.float32)
-        return DriverRun(carry, S_hist, W_hist, rounds, rates)
+        return DriverRun(carry, S_hist, W_hist, rounds, rates, diag=diag,
+                         diag_names=self._diag_names())
 
     def _run_traced_scan(self, ops, W0, carry, T, t0, dt) -> DriverRun:
         Ls, etas = self.dynamic.operands(t0, T, dtype=dt)
         kind = "dense" if ops.dense is not None else "data"
-        fn = self._traced_scan_fn(T, kind)
-        carry, (S_hist, W_hist) = fn(ops.array, W0, carry, Ls, etas)
+        fn, warm = self._traced_scan_fn(T, kind)
+        with tracing.span("driver.launch", substrate="traced_scan", T=int(T),
+                          warm=warm):
+            carry, ys = fn(ops.array, W0, carry, Ls, etas)
+        S_hist, W_hist = ys[0], ys[1]
+        diag = ys[2] if self.diagnostics is not None else None
         rounds = np.arange(1, T + 1, dtype=np.float32) * float(self.step.rounds)
         rates = self.dynamic.contraction_rates(t0, T)
-        return DriverRun(carry, S_hist, W_hist, rounds, rates)
+        return DriverRun(carry, S_hist, W_hist, rounds, rates, diag=diag,
+                         diag_names=self._diag_names())
 
     def _run_unrolled(self, ops, W0, carry, T, t0, dt) -> DriverRun:
         step, eng, dyn = self.step, self.engine, self.dynamic
-        S_hist, W_hist, rounds, rates = [], [], [], []
+        spec = self.diagnostics
+        S_hist, W_hist, rounds, rates, diag = [], [], [], [], []
         total = 0
-        for i in range(T):
-            t = t0 + i
-            r = step.rounds_at(t)
-            total += r
-            if dyn is not None:
-                topo_t = dyn.topology_at(t)
-                L_t = jnp.asarray(topo_t.mixing, dt)
-                eta_t = dyn.eta_of(topo_t)
-                mix = step.make_mix_traced(dyn, L_t, eta_t, rounds=r)
-                apply_mix = step.make_apply_mix_traced(dyn, ops, L_t, eta_t,
-                                                       rounds=r)
-                rates.append(float(dyn.contraction_rates(t, 1, rounds=r)[0]))
-            else:
-                mix = step.make_mix(eng, rounds=r)
-                apply_mix = step.make_apply_mix(eng, ops, rounds=r)
-                rates.append(eng.contraction_rate(r))
-            carry, (S_t, W_t) = step(carry, mix, W0, ops.apply,
-                                     apply_mix=apply_mix)
-            S_hist.append(S_t)
-            W_hist.append(W_t)
-            rounds.append(total)
+        with tracing.span("driver.launch", substrate="unrolled", T=int(T)):
+            for i in range(T):
+                t = t0 + i
+                r = step.rounds_at(t)
+                total += r
+                if dyn is not None:
+                    topo_t = dyn.topology_at(t)
+                    L_t = jnp.asarray(topo_t.mixing, dt)
+                    eta_t = dyn.eta_of(topo_t)
+                    mix = step.make_mix_traced(dyn, L_t, eta_t, rounds=r)
+                    apply_mix = step.make_apply_mix_traced(dyn, ops, L_t,
+                                                           eta_t, rounds=r)
+                    rates.append(float(dyn.contraction_rates(t, 1,
+                                                             rounds=r)[0]))
+                else:
+                    mix = step.make_mix(eng, rounds=r)
+                    apply_mix = step.make_apply_mix(eng, ops, rounds=r)
+                    rates.append(eng.contraction_rate(r))
+                new_carry, (S_t, W_t) = step(carry, mix, W0, ops.apply,
+                                             apply_mix=apply_mix)
+                if spec is not None:
+                    diag.append(step.measure(spec, new_carry, carry))
+                carry = new_carry
+                S_hist.append(S_t)
+                W_hist.append(W_t)
+                rounds.append(total)
         return DriverRun(carry, jnp.stack(S_hist), jnp.stack(W_hist),
                          np.asarray(rounds, dtype=np.float32),
-                         np.asarray(rates, dtype=np.float32))
+                         np.asarray(rates, dtype=np.float32),
+                         diag=jnp.stack(diag) if spec is not None else None,
+                         diag_names=self._diag_names())
 
     # ----------------------------------------------- batched multi-problem
     def run_batch(self, ops_batch, W0, *, T: int,
@@ -450,14 +520,20 @@ class IterationDriver:
                 ops_all.append((Ls_b, etas_b))
             Ls = jnp.stack([o[0] for o in ops_all])
             etas = jnp.stack([o[1] for o in ops_all])
-            fn = self._batch_fn(T, kind, with_history, dynamic=True)
-            out = fn(arr, W0, Ls, etas)
+            fn, warm = self._batch_fn(T, kind, with_history, dynamic=True)
+            with tracing.span("driver.launch", substrate="vmap", T=int(T),
+                              warm=warm):
+                out = fn(arr, W0, Ls, etas)
         else:
-            fn = self._batch_fn(T, kind, with_history, dynamic=False)
-            out = fn(arr, W0)
-        carry, hists = out
+            fn, warm = self._batch_fn(T, kind, with_history, dynamic=False)
+            with tracing.span("driver.launch", substrate="vmap", T=int(T),
+                              warm=warm):
+                out = fn(arr, W0)
+        carry, hists, dvals = out
+        diag = dvals if self.diagnostics is not None else None
         S, W, G_prev = carry[:3]
         extras = tuple(carry[3:])
+        names = self._diag_names()
         if telemetry.enabled():
             K = step.rounds
             if self.dynamic is not None:
@@ -469,10 +545,18 @@ class IterationDriver:
             telemetry.emit_iterations(
                 "driver.run_batch", 0, rounds, rates, batch=B,
                 bytes_per_round=self.bytes_per_round(W0))
+            if diag is not None and names:
+                # one event stream for the batch: worst problem per
+                # iteration/observable (max over the B axis)
+                diagnostics_lib.emit_diag(
+                    "driver.run_batch", 0, names,
+                    np.asarray(diag).max(axis=0),
+                    floor=self.quantization_floor(), batch=B)
         if with_history:
             return BatchRun(S, W, G_prev, S_hist=hists[0], W_hist=hists[1],
-                            extras=extras)
-        return BatchRun(S, W, G_prev, extras=extras)
+                            extras=extras, diag=diag, diag_names=names)
+        return BatchRun(S, W, G_prev, extras=extras, diag=diag,
+                        diag_names=names)
 
     @staticmethod
     def _stack_problems(ops_batch) -> Tuple[str, jax.Array]:
@@ -493,13 +577,19 @@ class IterationDriver:
 
     def _batch_fn(self, T: int, kind: str, with_history: bool,
                   dynamic: bool):
-        key = (T, kind, with_history, dynamic)
+        spec = self.diagnostics
+        key = (T, kind, with_history, dynamic, spec)
         fn = self._batch_cache.get(key)
+        warm = fn is not None
         telemetry.emit("launch", source="driver.run_batch", substrate="vmap",
-                       T=T, kind=kind, warm=fn is not None)
+                       T=T, kind=kind, warm=warm)
         if fn is not None:
-            return fn
+            return fn, warm
         step, eng, dyn = self.step, self.engine, self.dynamic
+
+        def split_ys(carry, ys):
+            hists = (ys[0], ys[1]) if with_history else ()
+            return carry, hists, (ys[2] if spec is not None else ())
 
         def one_static(arr, W0_b):
             ops_b = (StackedOperators(dense=arr) if kind == "dense"
@@ -509,10 +599,14 @@ class IterationDriver:
             apply_mix = step.make_apply_mix(eng, ops_b)
 
             def body(c, _):
-                return step(c, mix, W0_b, ops_b.apply, apply_mix=apply_mix)
+                new_c, ys = step(c, mix, W0_b, ops_b.apply,
+                                 apply_mix=apply_mix)
+                if spec is not None:
+                    ys = ys + (step.measure(spec, new_c, c),)
+                return new_c, ys
 
-            carry, hists = jax.lax.scan(body, carry, None, length=T)
-            return carry, (hists if with_history else ())
+            carry, ys = jax.lax.scan(body, carry, None, length=T)
+            return split_ys(carry, ys)
 
         def one_dynamic(arr, W0_b, Ls_b, etas_b):
             ops_b = (StackedOperators(dense=arr) if kind == "dense"
@@ -521,19 +615,22 @@ class IterationDriver:
 
             def body(c, xs):
                 L_t, eta_t = xs
-                return step(
+                new_c, ys = step(
                     c, step.make_mix_traced(dyn, L_t, eta_t), W0_b,
                     ops_b.apply,
                     apply_mix=step.make_apply_mix_traced(dyn, ops_b, L_t,
                                                          eta_t))
+                if spec is not None:
+                    ys = ys + (step.measure(spec, new_c, c),)
+                return new_c, ys
 
-            carry, hists = jax.lax.scan(body, carry, (Ls_b, etas_b),
-                                        length=T)
-            return carry, (hists if with_history else ())
+            carry, ys = jax.lax.scan(body, carry, (Ls_b, etas_b),
+                                     length=T)
+            return split_ys(carry, ys)
 
         fn = jax.jit(jax.vmap(one_dynamic if dynamic else one_static))
         self._batch_cache[key] = fn
-        return fn
+        return fn, warm
 
     # --------------------------------------------------- shard_map builders
     def sharded_step_fn(self, mesh, axis: str, engine: ConsensusEngine,
@@ -557,6 +654,11 @@ class IterationDriver:
             raise ValueError(
                 "EF wire modes are not supported on the shard_map "
                 "substrate (the engine rejects wire_dtype there)")
+        if self.diagnostics is not None:
+            raise ValueError(
+                "in-graph diagnostics are not supported on the shard_map "
+                "substrate (observables are max-over-agents reductions; "
+                "agents are a physical device axis there)")
         nslots = step.carry_slots
         spec_v = P(axis)
 
@@ -598,6 +700,11 @@ class IterationDriver:
             raise ValueError(
                 "EF wire modes are not supported on the shard_map "
                 "substrate (the engine rejects wire_dtype there)")
+        if self.diagnostics is not None:
+            raise ValueError(
+                "in-graph diagnostics are not supported on the shard_map "
+                "substrate (observables are max-over-agents reductions; "
+                "agents are a physical device axis there)")
         K = step.rounds
         nslots = step.carry_slots
         spec_v = P(axis)

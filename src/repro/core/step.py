@@ -269,6 +269,19 @@ class PowerStep:
             + ((ef,) if self.ef_wire else ())
         return (S_new, W_new, G) + new_extras, (S_new, W_new)
 
+    def measure(self, spec, new_carry: Carry, old_carry: Carry) -> jax.Array:
+        """In-graph diagnostics for one application of this step.
+
+        Delegates to :func:`repro.runtime.diagnostics.diag_vector` (the
+        registered compute site) with this step's slot layout — the step
+        owns what ``carry[1]`` / ``carry[3]`` / ``carry[-1]`` mean, so the
+        driver's scan bodies never hard-code it.  Returns the stacked fp32
+        observable vector ordered as ``spec.names(self)``; pure jnp, safe
+        inside any traced substrate.
+        """
+        from repro.runtime.diagnostics import diag_vector
+        return diag_vector(spec, self, new_carry, old_carry)
+
     def make_mix(self, engine, rounds: int = None):
         """Stacked-form ``mix`` callable for one iteration on a static
         :class:`~repro.core.consensus.ConsensusEngine`.  For ``ef_wire``

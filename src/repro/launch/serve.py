@@ -107,9 +107,15 @@ def serve_pca(args) -> None:
     if accelerated:
         print(f"[serve] accelerated power iterations (momentum="
               f"{momentum:g})")
+    from repro.runtime.diagnostics import resolve_diagnostics
+    diag = resolve_diagnostics(args.diag)
     driver = IterationDriver(step=PowerStep.for_algorithm(
         "deepca", args.rounds, accelerated=accelerated, momentum=momentum,
-        ef_wire=engine.ef_wire), engine=engine)
+        ef_wire=engine.ef_wire), engine=engine, diagnostics=diag)
+    if diag is not None:
+        print(f"[serve] in-graph diagnostics: "
+              f"{','.join(diag.names(driver.step))} "
+              f"(wire floor {driver.quantization_floor():.1e})")
 
     if args.profile_stages:
         stages = driver.profile_stages(problems[0], W0[0])
@@ -161,7 +167,7 @@ def serve_pca_stream(args) -> None:
         backend="stacked", W0=stream.init_W0(),
         policy=DriftPolicy(target=args.target),
         accelerated=args.accel or None, momentum=args.momentum,
-        wire_dtype=wire)
+        wire_dtype=wire, diagnostics=args.diag)
     print(f"[stream] m={m} d={d} k={k} rate={args.drift_rate}/tick "
           f"T_tick={args.tick_iters} K={args.rounds} target={args.target}")
     t0 = time.perf_counter()
@@ -180,7 +186,8 @@ def serve_pca_stream(args) -> None:
     # --- 2. ragged one-shot requests through the dynamic-batching queue --
     svc = PCAService(topo, T=args.iters, K=args.rounds, backend="stacked",
                      policy=AdmissionPolicy(max_batch=args.max_batch,
-                                            max_wait=args.max_wait))
+                                            max_wait=args.max_wait),
+                     diagnostics=args.diag)
     reqs = ragged_requests(m, d, k, args.requests,
                            n_base=args.n_per_agent, seed=args.seed)
     t0 = time.perf_counter()
@@ -256,29 +263,68 @@ def main() -> None:
     ap.add_argument("--max-wait", type=float, default=0.01,
                     help="admission policy: max queue wait (s)")
     ap.add_argument("--telemetry", default=None, metavar="SPEC",
-                    help="event sink: 'null', 'log', or 'jsonl:PATH' "
-                         "(default: $REPRO_TELEMETRY if set); streams "
-                         "per-iteration contraction rate/comm rounds, "
-                         "warm-vs-cold launches, drift/restart events")
+                    help="event sink: 'null', 'log', 'jsonl:PATH', or "
+                         "'jsonl+buffer:PATH' (default: $REPRO_TELEMETRY "
+                         "if set); streams per-iteration contraction "
+                         "rate/comm rounds, warm-vs-cold launches, "
+                         "drift/restart events")
+    ap.add_argument("--diag", nargs="?", const="on", default=None,
+                    metavar="OBS",
+                    help="in-graph convergence diagnostics: bare --diag "
+                         "enables every observable; or a comma list from "
+                         "consensus,movement,ef_residual,momentum "
+                         "(default: $REPRO_DIAG if set).  Emits 'diag' "
+                         "events and arms the live health monitor "
+                         "(see README 'Observability')")
+    ap.add_argument("--trace", default=None, metavar="SPEC",
+                    help="span tracing: 'chrome:PATH' writes a Chrome "
+                         "trace-event JSON (open in Perfetto), "
+                         "'chrome+jax:PATH' also wraps spans in "
+                         "jax.profiler annotations, 'jax' annotates only "
+                         "(default: $REPRO_TRACE if set)")
     args = ap.parse_args()
 
     from repro.runtime import config as runtime_config
-    from repro.runtime import telemetry
-    spec = args.telemetry if args.telemetry is not None \
-        else runtime_config.get_config().telemetry
+    from repro.runtime import diagnostics, telemetry, tracing
+    cfg = runtime_config.get_config()
+    spec = args.telemetry if args.telemetry is not None else cfg.telemetry
     sink = telemetry.sink_from_spec(spec)
     telemetry.set_sink(sink)
+    monitor = None
+    if diagnostics.resolve_diagnostics(args.diag) is not None:
+        monitor = diagnostics.install_health_monitor()
+    tracer = tracing.tracer_from_spec(
+        args.trace if args.trace is not None else cfg.trace)
+    if tracer is not None:
+        tracing.set_tracer(tracer)
     telemetry.emit("config", workload=args.workload,
                    **runtime_config.describe())
     try:
-        if args.workload == "pca":
-            serve_pca(args)
-        elif args.workload == "pca-stream":
-            serve_pca_stream(args)
-        else:
-            serve_lm(args)
+        with tracing.span("serve.request", workload=args.workload):
+            if args.workload == "pca":
+                serve_pca(args)
+            elif args.workload == "pca-stream":
+                serve_pca_stream(args)
+            else:
+                serve_lm(args)
     finally:
-        sink.close()
+        # finalize/summarize BEFORE the sink closes so the summary health
+        # event (and any trailing buffered events) land in the sink
+        if monitor is not None:
+            diagnoses = monitor.finalize()
+            if diagnoses:
+                print(f"[health] {len(diagnoses)} diagnosis(es) raised:")
+                for dgn in diagnoses:
+                    print(f"[health]   {dgn['rule']}: {dgn['message']}")
+            else:
+                print("[health] ok — no diagnoses raised")
+        if tracer is not None:
+            tracing.set_tracer(None)
+            tracer.save()
+            if getattr(tracer, "path", None):
+                print(f"[trace] {len(tracer)} spans -> {tracer.path} "
+                      "(load in Perfetto / chrome://tracing)")
+        telemetry.get_sink().close()
 
 
 if __name__ == "__main__":

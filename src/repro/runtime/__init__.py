@@ -1,5 +1,8 @@
-from . import config, telemetry
+from . import config, telemetry, diagnostics, tracing
 from .config import RuntimeConfig, configure, get_config, override
+from .diagnostics import (DiagnosticsSpec, HealthMonitor, HealthRules,
+                          install_health_monitor, resolve_diagnostics)
+from .tracing import ChromeTracer, set_tracer, span, tracer_from_spec
 from .fault_tolerance import (AgentFailure, DisconnectedTopologyError,
                               ResilientLoop, StragglerMonitor,
                               deepca_with_failures, degrade_topology,

@@ -49,14 +49,22 @@ ENV_WIRE_DTYPE = "REPRO_WIRE_DTYPE"
 #: Accelerated (momentum) power iterations: 'off'/'0' | 'on'/'1' (default
 #: momentum) | a float momentum value.
 ENV_ACCEL = "REPRO_ACCEL"
+#: In-graph convergence diagnostics: 'off'/'0' | 'on'/'1'/'all' | a
+#: comma-list of observables (see :data:`DIAG_OBSERVABLES`).
+ENV_DIAG = "REPRO_DIAG"
+#: Span-tracing spec: 'off' | 'jax' | 'chrome:PATH' | 'chrome+jax:PATH'.
+ENV_TRACE = "REPRO_TRACE"
 
 #: Every env var this module owns, in field order of :class:`RuntimeConfig`.
 ENV_VARS: Tuple[str, ...] = (ENV_QR_IMPL, ENV_FASTMIX_BLOCK_N, ENV_AUTOTUNE,
                              ENV_AUTOTUNE_CACHE, ENV_TELEMETRY,
-                             ENV_WIRE_DTYPE, ENV_ACCEL)
+                             ENV_WIRE_DTYPE, ENV_ACCEL, ENV_DIAG, ENV_TRACE)
 
 QR_IMPLS = ("cholqr2", "householder")
 WIRE_DTYPES = ("bf16", "int8", "fp8")
+#: Observable names a ``REPRO_DIAG`` comma-list may select — the single
+#: source of truth shared with :mod:`repro.runtime.diagnostics`.
+DIAG_OBSERVABLES = ("consensus", "movement", "ef_residual", "momentum")
 #: Momentum used when acceleration is requested as a bare flag.  The
 #: optimum is problem-dependent (beta* ~ lambda_{k+1}^2 / 4 for the power
 #: method); 0.25 is the spectrum-agnostic setting that is safe whenever
@@ -128,6 +136,47 @@ def _parse_accel(raw: Optional[str]) -> Optional[float]:
     return beta if beta > 0.0 else None
 
 
+def _parse_diag(raw: Optional[str]) -> Optional[str]:
+    """Normalized diagnostics spec: ``None`` = off, ``'on'`` = everything,
+    else a validated comma-list of :data:`DIAG_OBSERVABLES`."""
+    if raw is None:
+        return None
+    val = raw.strip().lower()
+    if val in _FALSE:
+        return None
+    if val in _TRUE or val == "all":
+        return "on"
+    parts = tuple(p.strip() for p in val.split(",") if p.strip())
+    bad = sorted(set(parts) - set(DIAG_OBSERVABLES))
+    if bad or not parts:
+        raise ValueError(
+            f"{ENV_DIAG} must be a boolean flag or a comma-list of "
+            f"{'/'.join(DIAG_OBSERVABLES)}, got {raw!r}")
+    return ",".join(parts)
+
+
+def _parse_trace(raw: Optional[str]) -> Optional[str]:
+    """Validated span-tracing spec (kept as the spec string; the tracer
+    itself is built lazily by :mod:`repro.runtime.tracing`)."""
+    if raw is None:
+        return None
+    val = raw.strip()
+    if val.lower() in _FALSE or val.lower() in ("none", "null"):
+        return None
+    if val.lower() == "jax":
+        return "jax"
+    for prefix in ("chrome:", "chrome+jax:"):
+        if val.lower().startswith(prefix):
+            if not val[len(prefix):]:
+                raise ValueError(
+                    f"{ENV_TRACE} spec {raw!r} needs a file path after "
+                    f"'{prefix}'")
+            return val
+    raise ValueError(
+        f"{ENV_TRACE} must be 'jax', 'chrome:PATH', 'chrome+jax:PATH' or "
+        f"'off', got {raw!r}")
+
+
 def _parse_bool(raw: Optional[str], env: str) -> bool:
     if raw is None:
         return False
@@ -166,6 +215,13 @@ class RuntimeConfig:
     #: Default accelerated-power-iteration momentum (``None`` -> off); the
     #: value is the beta used when an entry point does not pass its own.
     accel: Optional[float] = None
+    #: In-graph diagnostics spec (``None`` -> off, ``'on'``, or a
+    #: comma-list) consumed by
+    #: :func:`repro.runtime.diagnostics.resolve_diagnostics`.
+    diag: Optional[str] = None
+    #: Span-tracing spec (``None`` -> off) consumed by
+    #: :func:`repro.runtime.tracing.tracer_from_spec`.
+    trace: Optional[str] = None
 
     def describe(self) -> Dict[str, Any]:
         """JSON-serializable provenance snapshot: the resolved knobs, the
@@ -207,7 +263,7 @@ def from_env() -> RuntimeConfig:
     consumer loudly rather than just the one that happens to read it.
     """
     (raw_qr, raw_block, raw_auto, raw_cache, raw_tel, raw_wire,
-     raw_accel) = _env_snapshot()
+     raw_accel, raw_diag, raw_trace) = _env_snapshot()
     return RuntimeConfig(
         qr_impl=_parse_qr_impl(raw_qr),
         fastmix_block_n=_parse_positive_int(raw_block, ENV_FASTMIX_BLOCK_N),
@@ -216,6 +272,8 @@ def from_env() -> RuntimeConfig:
         telemetry=raw_tel or None,
         wire_dtype=_parse_wire_dtype(raw_wire),
         accel=_parse_accel(raw_accel),
+        diag=_parse_diag(raw_diag),
+        trace=_parse_trace(raw_trace),
     )
 
 
@@ -252,6 +310,10 @@ def _validate_override(kwargs: Dict[str, Any]) -> Dict[str, Any]:
             out[name] = _parse_wire_dtype(str(value))
         elif name == "accel":
             out[name] = _parse_accel(str(value))
+        elif name == "diag":
+            out[name] = _parse_diag("on" if value is True else str(value))
+        elif name == "trace":
+            out[name] = _parse_trace(str(value))
         else:
             out[name] = str(value)
     return out
@@ -345,7 +407,9 @@ def configure(*,
               autotune_cache: Optional[str] = None,
               telemetry: Optional[str] = None,
               wire_dtype: Optional[str] = None,
-              accel: Optional[Any] = None) -> RuntimeConfig:
+              accel: Optional[Any] = None,
+              diag: Optional[Any] = None,
+              trace: Optional[str] = None) -> RuntimeConfig:
     """One-call process setup: x64 / platform / fake-device-count as
     first-class arguments, plus persistent ``REPRO_*`` knob assignment.
 
@@ -368,7 +432,9 @@ def configure(*,
              (ENV_AUTOTUNE_CACHE, autotune_cache),
              (ENV_TELEMETRY, telemetry),
              (ENV_WIRE_DTYPE, wire_dtype),
-             (ENV_ACCEL, accel))
+             (ENV_ACCEL, accel),
+             (ENV_DIAG, diag),
+             (ENV_TRACE, trace))
     for env, val in knobs:
         if val is not None:
             if isinstance(val, bool):

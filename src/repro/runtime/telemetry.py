@@ -37,13 +37,27 @@ event               fields
 ``stream.escalation``  ``tick``, ``escalation`` (1-based count),
                     ``stat`` — drift policy demanded extra iterations
 ``autotune``        ``kernel``, ``param``, ``key``, ``hit``, ``value``
+``diag``            ``source``, ``t``, ``floor`` (wire quantization
+                    floor) plus the measured in-graph observables the
+                    :class:`~repro.runtime.diagnostics.DiagnosticsSpec`
+                    enabled: ``consensus``, ``movement``,
+                    ``ef_residual``, ``momentum``; batch runs add
+                    ``batch`` (values are max-over-problems)
+``health``          ``rule`` (named diagnosis, or ``summary`` at
+                    finalize), ``message``, rule-specific context —
+                    from :class:`repro.runtime.diagnostics.HealthMonitor`
+``span``            ``name``, ``dur_us``, ``depth`` plus span attrs —
+                    mirrors :mod:`repro.runtime.tracing` spans when a
+                    tracer is installed
 ==================  =====================================================
 
 Sinks: :class:`NullSink` (default, free), :class:`LoggingSink` (stdlib
 logging), :class:`JsonlSink` (one JSON object per line, thread-safe,
-flushed per event), :class:`CallbackSink` (the wandb-style hook seam —
-hand it ``wandb.log``-shaped callables), :class:`RecordingSink` (in-memory,
-for tests; see also :func:`capture`).
+flushed per event — or every ``flush_every`` events in buffered mode),
+:class:`CallbackSink` (the wandb-style hook seam — hand it
+``wandb.log``-shaped callables; a raising callback is swallowed and the
+sink self-disables after :attr:`CallbackSink.max_failures` failures),
+:class:`RecordingSink` (in-memory, for tests; see also :func:`capture`).
 """
 from __future__ import annotations
 
@@ -53,6 +67,7 @@ import logging
 import os
 import threading
 import time
+import warnings
 from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
                     TextIO, Tuple)
 
@@ -107,16 +122,30 @@ def _jsonable(obj: Any) -> Any:
 class JsonlSink(TelemetrySink):
     """One JSON object per line: ``{"event", "seq", "ts", **fields}``.
 
-    The file opens lazily in append mode, writes are lock-serialized and
-    flushed per event, so a crashed run keeps every emitted record and a
-    tail-reader sees events live.
+    The file opens lazily in append mode and writes are lock-serialized.
+    Durability semantics are set by ``flush_every``:
+
+    * ``flush_every=1`` (default, the ``jsonl:PATH`` spec): flushed per
+      event, so a crashed run keeps every emitted record and a
+      tail-reader sees events live.
+    * ``flush_every=N`` (the ``jsonl+buffer:PATH`` spec, N=64): flushed
+      every N events — per-event ``flush()`` stops taxing tight
+      streaming loops, at the cost that up to N-1 trailing events are
+      lost if the process dies without :meth:`close`.  :meth:`close`
+      (run by ``serve``'s ``finally`` and :func:`set_sink` swaps done by
+      ``configure``) always flushes the remainder.
     """
 
-    def __init__(self, path: str):
+    #: buffered-mode default used by the ``jsonl+buffer:PATH`` spec.
+    BUFFERED_FLUSH_EVERY = 64
+
+    def __init__(self, path: str, flush_every: int = 1):
         self.path = path
+        self.flush_every = max(1, int(flush_every))
         self._lock = threading.Lock()
         self._file: Optional[TextIO] = None
         self._seq = 0
+        self._pending = 0
 
     def emit(self, event: str, fields: Dict[str, Any]) -> None:
         with self._lock:
@@ -130,27 +159,51 @@ class JsonlSink(TelemetrySink):
             rec.update(fields)
             self._seq += 1
             self._file.write(json.dumps(rec, default=_jsonable) + "\n")
-            self._file.flush()
+            self._pending += 1
+            if self._pending >= self.flush_every:
+                self._file.flush()
+                self._pending = 0
 
     def close(self) -> None:
         with self._lock:
             if self._file is not None:
                 self._file.close()
                 self._file = None
+                self._pending = 0
 
 
 class CallbackSink(TelemetrySink):
     """wandb-style hook seam: forwards each event to ``fn(event, fields)``.
 
     ``CallbackSink(lambda event, fields: wandb.log(fields))`` is the
-    whole integration.
+    whole integration.  A raising callback must not take down the driver
+    hot path: exceptions are caught and logged, and after
+    ``max_failures`` of them the sink deactivates itself (with a
+    ``RuntimeWarning``) so a permanently-broken hook costs nothing.
     """
 
-    def __init__(self, fn: Callable[[str, Dict[str, Any]], None]):
+    def __init__(self, fn: Callable[[str, Dict[str, Any]], None],
+                 max_failures: int = 3):
         self.fn = fn
+        self.max_failures = max(1, int(max_failures))
+        self.failures = 0
 
     def emit(self, event: str, fields: Dict[str, Any]) -> None:
-        self.fn(event, dict(fields))
+        if not self.active:
+            return
+        try:
+            self.fn(event, dict(fields))
+        except Exception:
+            self.failures += 1
+            logging.getLogger("repro.telemetry").warning(
+                "telemetry callback raised (failure %d/%d)",
+                self.failures, self.max_failures, exc_info=True)
+            if self.failures >= self.max_failures:
+                self.active = False  # instance attr shadows the class flag
+                warnings.warn(
+                    f"telemetry callback raised {self.failures} times; "
+                    "disabling CallbackSink", RuntimeWarning,
+                    stacklevel=2)
 
 
 class RecordingSink(TelemetrySink):
@@ -205,8 +258,10 @@ def capture() -> Iterator[RecordingSink]:
 
 
 def sink_from_spec(spec: Optional[str]) -> TelemetrySink:
-    """Parse a sink spec: ``null``/``none``/``off``, ``log``, or
-    ``jsonl:PATH`` (the ``--telemetry`` flag / ``REPRO_TELEMETRY`` format).
+    """Parse a sink spec: ``null``/``none``/``off``, ``log``,
+    ``jsonl:PATH``, or ``jsonl+buffer:PATH`` (buffered writes, see
+    :class:`JsonlSink`) — the ``--telemetry`` flag / ``REPRO_TELEMETRY``
+    format.
     """
     if spec is None:
         return NullSink()
@@ -216,13 +271,16 @@ def sink_from_spec(spec: Optional[str]) -> TelemetrySink:
         return NullSink()
     if low in ("log", "logging"):
         return LoggingSink()
-    if low.startswith("jsonl:"):
-        path = text[len("jsonl:"):]
-        if not path:
-            raise ValueError("jsonl telemetry sink needs a path: 'jsonl:PATH'")
-        return JsonlSink(path)
+    for prefix, flush_every in (("jsonl+buffer:", JsonlSink.
+                                 BUFFERED_FLUSH_EVERY), ("jsonl:", 1)):
+        if low.startswith(prefix):
+            path = text[len(prefix):]
+            if not path:
+                raise ValueError(
+                    f"jsonl telemetry sink needs a path: '{prefix}PATH'")
+            return JsonlSink(path, flush_every=flush_every)
     raise ValueError(f"unknown telemetry sink spec {spec!r}; expected "
-                     "'null', 'log', or 'jsonl:PATH'")
+                     "'null', 'log', 'jsonl:PATH', or 'jsonl+buffer:PATH'")
 
 
 # ------------------------------------------------------ emission helpers

@@ -49,7 +49,8 @@ from repro.core.driver import IterationDriver
 from repro.core.operators import StackedOperators
 from repro.core.step import PowerStep
 from repro.core.topology import Topology
-from repro.runtime import telemetry
+from repro.runtime import telemetry, tracing
+from repro.runtime.diagnostics import resolve_diagnostics
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -121,7 +122,8 @@ class PCAService:
     def __init__(self, topology: Topology, *, T: int, K: int,
                  algorithm: str = "deepca", backend: str = "stacked",
                  policy: AdmissionPolicy = AdmissionPolicy(),
-                 clock=time.monotonic, seed: int = 0):
+                 clock=time.monotonic, seed: int = 0,
+                 diagnostics: Optional[object] = None):
         self.policy = policy
         self.T = int(T)
         self.m = topology.m
@@ -130,7 +132,8 @@ class PCAService:
         engine = ConsensusEngine.for_algorithm(algorithm, topology, K=K,
                                                backend=backend)
         self.driver = IterationDriver(
-            step=PowerStep.for_algorithm(algorithm, K), engine=engine)
+            step=PowerStep.for_algorithm(algorithm, K), engine=engine,
+            diagnostics=resolve_diagnostics(diagnostics))
         self._buckets: Dict[tuple, List[_Pending]] = {}
         self._results: Dict[int, PCAResponse] = {}
         self._next_id = 0
@@ -255,7 +258,9 @@ class PCAService:
         self.stats["batches"] += 1
         telemetry.emit("service.launch", bucket=str(key), batch=B,
                        batch_padded=B_pad, warm=warm)
-        out = self.driver.run_batch(problems, W0, T=self.T)
+        with tracing.span("service.launch", bucket=str(key), batch=B_pad,
+                          warm=warm):
+            out = self.driver.run_batch(problems, W0, T=self.T)
         for b, p in enumerate(q):
             k = p.W0.shape[1]
             self._results[p.request_id] = PCAResponse(

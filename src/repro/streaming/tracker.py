@@ -48,7 +48,9 @@ from repro.core.operators import StackedOperators
 from repro.core.schedule import TopologySchedule
 from repro.core.step import PowerStep
 from repro.core.topology import Topology
-from repro.runtime import telemetry
+from repro.runtime import telemetry, tracing
+from repro.runtime.diagnostics import (ESCALATE_RULES, current_monitor,
+                                       resolve_diagnostics)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +140,7 @@ class StreamingDeEPCA:
     accelerated: Optional[bool] = None    # momentum power iterations
     momentum: Optional[float] = None      # None -> REPRO_ACCEL / default
     wire_dtype: Optional[str] = None      # None -> REPRO_WIRE_DTYPE
+    diagnostics: Optional[object] = None  # None -> REPRO_DIAG (off default)
 
     def __post_init__(self):
         from repro.core.algorithms import resolve_acceleration
@@ -152,7 +155,9 @@ class StreamingDeEPCA:
             increasing_consensus=self.increasing_consensus,
             accelerated=accelerated, momentum=momentum,
             ef_wire=(dyn if dyn is not None else eng).ef_wire)
-        self.driver = IterationDriver(step=step, engine=eng, dynamic=dyn)
+        self.driver = IterationDriver(
+            step=step, engine=eng, dynamic=dyn,
+            diagnostics=resolve_diagnostics(self.diagnostics))
         self._carry = None   # (S, W, G_prev[, W_prev][, ef]) driver carry
         self._rounds = 0.0          # cumulative gossip rounds
         self._iters = 0             # cumulative (global) power iterations
@@ -244,6 +249,11 @@ class StreamingDeEPCA:
             tick's mean operator, for tan-theta monitoring and
             ``policy.target``.
         """
+        with tracing.span("stream.tick", tick=self._ticks):
+            return self._tick(ops, U)
+
+    def _tick(self, ops: StackedOperators,
+              U: Optional[jax.Array]) -> TickReport:
         pol = self.policy
         if self.W0 is None:
             raise ValueError(
@@ -251,15 +261,28 @@ class StreamingDeEPCA:
                 "before the first tick")
         esc_T = pol.escalate_T or self.T_tick
         rounds_before, iters_before = self._rounds, self._iters
+        monitor = current_monitor()
+        mark = monitor.mark() if monitor is not None else 0
         traces = [self._window(ops, self.W0, U, self.T_tick)]
         stat = jump_stat = self._stat(traces[-1], U)
+
+        # health escalation: when the live :class:`~repro.runtime
+        # .diagnostics.HealthMonitor` raised a fresh stalled-movement /
+        # contraction-collapse diagnosis during this tick's first window,
+        # the measured observables say convergence is sick even if the
+        # drift statistic looks quiet — treat it as drift so the adaptive
+        # escalation loop below spends at least one extra window on it.
+        health_flag = monitor is not None and any(
+            d.get("rule") in ESCALATE_RULES
+            for d in monitor.new_diagnoses(mark))
 
         # drift decisions: the FIRST window's statistic against the running
         # EWMA of previous ticks' first-window statistics — the one
         # apples-to-apples signal of how much the data moved this tick
         # (post-escalation stats measure effort spent, not drift)
         base = max(self._ewma, pol.floor) if self._ewma is not None else None
-        drift = base is not None and jump_stat > pol.jump * base
+        drift = (base is not None and jump_stat > pol.jump * base) \
+            or health_flag
         severe = base is not None and jump_stat > pol.restart * base
         restarted = False
         if severe:

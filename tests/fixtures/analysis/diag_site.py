@@ -1,0 +1,11 @@
+"""Fixture: a shadowing redefinition of the diagnostic-reduction seam.
+
+``diag_vector`` is the single registered home of the in-graph measured
+observables (``diag-observables`` compute site); redefining the name
+outside ``repro/runtime/diagnostics.py`` forks the observable semantics
+and must fire ``duplicate-compute-site``.
+"""
+
+
+def diag_vector(spec, step, new_carry, old_carry):   # reserved-def shadow
+    return []

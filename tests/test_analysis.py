@@ -56,6 +56,7 @@ def test_lint_clean_on_repo_tree():
     ("bare_assert.py", "bare-assert", "assert"),
     ("host_sync.py", "host-sync", "item"),
     ("env_config.py", "env-config", "REPRO_"),
+    ("diag_site.py", "duplicate-compute-site", "diag_vector"),
 ])
 def test_lint_fires_on_fixture(fixture, code, needle):
     r = lint.run(files=[_fixture(fixture)])
@@ -206,6 +207,16 @@ def test_retrace_driver_run_warm_zero_compiles():
     assert count == 0, messages
 
 
+def test_retrace_diag_run_warm_zero_compiles():
+    """Regression pin: warm driver.run repeats with in-graph diagnostics ON
+    stay on one cached scan program — measuring must not cost steady-state
+    compiles."""
+    contract = next(c for c in retrace.CONTRACTS
+                    if c.name == "diag-run-warm")
+    count, messages = retrace.measure(contract)
+    assert count == 0, messages
+
+
 # ===================================================================== budget
 def test_budget_clean_on_repo_defaults():
     r = budget.run()
@@ -315,4 +326,4 @@ def test_fixture_files_are_committed():
     names = {os.path.basename(p)
              for p in glob.glob(os.path.join(FIXTURES, "*.py"))}
     assert {"dup_tracking_site.py", "direct_qr.py", "bare_assert.py",
-            "host_sync.py", "env_config.py"} <= names
+            "host_sync.py", "env_config.py", "diag_site.py"} <= names

@@ -183,6 +183,66 @@ def test_jsonl_sink_round_trip(tmp_path):
     assert recs[1]["warm"] is True and recs[1]["substrate"] == "scan"
 
 
+def test_jsonl_sink_buffered_mode_flushes_in_batches(tmp_path):
+    path = str(tmp_path / "buf.jsonl")
+    sink = telemetry.JsonlSink(path, flush_every=3)
+    prev = telemetry.set_sink(sink)
+    try:
+        telemetry.emit("iteration", t=0)
+        telemetry.emit("iteration", t=1)
+        # below the flush threshold: nothing durable yet
+        assert os.path.getsize(path) == 0
+        telemetry.emit("iteration", t=2)        # third event flushes a batch
+        with open(path) as f:
+            assert len(f.readlines()) == 3
+        telemetry.emit("iteration", t=3)        # buffered again
+        with open(path) as f:
+            assert len(f.readlines()) == 3
+    finally:
+        telemetry.set_sink(prev)
+        sink.close()                    # documented: close() always flushes
+    with open(path) as f:
+        recs = [json.loads(line) for line in f]
+    assert [r["t"] for r in recs] == [0, 1, 2, 3]
+    assert [r["seq"] for r in recs] == [0, 1, 2, 3]
+
+
+def test_sink_spec_jsonl_buffer(tmp_path):
+    sink = telemetry.sink_from_spec(f"jsonl+buffer:{tmp_path / 'b.jsonl'}")
+    assert isinstance(sink, telemetry.JsonlSink)
+    assert sink.flush_every == telemetry.JsonlSink.BUFFERED_FLUSH_EVERY
+    with pytest.raises(ValueError, match="needs a path"):
+        telemetry.sink_from_spec("jsonl+buffer:")
+
+
+def test_callback_sink_survives_raising_callback_then_disables():
+    delivered = []
+    calls = {"n": 0}
+
+    def hook(event, fields):
+        calls["n"] += 1
+        if calls["n"] > 2:
+            raise RuntimeError("hook broke")
+        delivered.append(fields)
+
+    sink = telemetry.CallbackSink(hook, max_failures=3)
+    prev = telemetry.set_sink(sink)
+    try:
+        telemetry.emit("iteration", t=0)
+        telemetry.emit("iteration", t=1)
+        for t in (2, 3):            # failures 1-2: caught, sink stays live
+            telemetry.emit("iteration", t=t)
+        assert sink.active and sink.failures == 2
+        with pytest.warns(RuntimeWarning, match="disabling CallbackSink"):
+            telemetry.emit("iteration", t=4)    # failure 3: deactivates
+        assert not sink.active
+        telemetry.emit("iteration", t=5)        # dead hook costs nothing
+    finally:
+        telemetry.set_sink(prev)
+    assert [f["t"] for f in delivered] == [0, 1]
+    assert calls["n"] == 5          # the t=5 emit never reached the hook
+
+
 # ================================================= driver instrumentation
 def _driver(m=8, d=16, k=2, K=4, seed=0):
     from repro.core import (ConsensusEngine, IterationDriver, PowerStep,
@@ -236,6 +296,66 @@ def test_driver_run_batch_emits_batched_events():
     assert len(iters) == T
     assert all(ev["batch"] == B and ev["source"] == "driver.run_batch"
                for ev in iters)
+
+
+def test_run_batch_event_ordering_and_monotone_rounds():
+    from repro.core import synthetic_problem_batch
+    B, m, d, k, T = 2, 8, 16, 2, 4
+    driver, _, _ = _driver(m=m, d=d, k=k)
+    problems, W0 = synthetic_problem_batch(B, m, d, k, n_per_agent=16,
+                                           seed=0)
+    with telemetry.capture() as rec:
+        driver.run_batch(problems, W0, T=T)
+        driver.run_batch(problems, W0, T=T)
+    # each window's launch event precedes its iteration block, in order
+    # (other events — e.g. autotune on the cold launch — may interleave)
+    names = [name for name, _ in rec.events
+             if name in ("launch", "iteration")]
+    assert names == (["launch"] + ["iteration"] * T) * 2
+    iters = rec.of("iteration")
+    for w in range(2):
+        window = iters[w * T:(w + 1) * T]
+        assert [ev["t"] for ev in window] == list(range(T))
+        rounds = [ev["rounds"] for ev in window]
+        assert rounds == sorted(rounds) and rounds[0] >= 1
+
+
+def test_tracker_telemetry_across_resumed_windows():
+    """Streaming ticks are resumed windows: the global iteration index
+    continues, per-window cumulative rounds restart, and the
+    ``bytes_on_wire`` deltas add up to the tracker's total wire cost."""
+    import math
+    from repro.core.topology import ring
+    from repro.streaming import (DriftPolicy, SlowRotationStream,
+                                 StreamingDeEPCA)
+    m, d, k, T_tick, ticks = 6, 16, 3, 2, 3
+    s = SlowRotationStream(m=m, d=d, k=k, n_per_agent=20, seed=0, rate=0.02)
+    passive = DriftPolicy(jump=math.inf, restart=math.inf,
+                          max_escalations=0)
+    tr = StreamingDeEPCA(k=k, T_tick=T_tick, K=3, topology=ring(m),
+                         backend="stacked", W0=s.init_W0(), policy=passive,
+                         wire_dtype="bf16")
+    with telemetry.capture() as rec:
+        for t in range(ticks):
+            tr.tick(s.ops_at(t))
+    iters = rec.of("iteration")
+    assert len(iters) == ticks * T_tick
+    # global iteration index is resume-continuous across windows
+    assert [ev["t"] for ev in iters] == list(range(ticks * T_tick))
+    for w in range(ticks):
+        rounds = [ev["rounds"] for ev in iters[w * T_tick:(w + 1) * T_tick]]
+        assert rounds == sorted(rounds) and rounds[0] >= 1
+    # the per-iteration bytes_on_wire deltas, summed across every resumed
+    # window, reproduce total_rounds x the engine's per-round cost model
+    bpr = tr.driver.engine.bytes_per_round(d, k)
+    total = sum(ev["bytes_on_wire"] for ev in iters)
+    assert total == int(round(tr.reports[-1].total_rounds)) * bpr
+    # each tick's stream.tick summary lands after its iteration block
+    names = [name for name, _ in rec.events]
+    assert names.count("stream.tick") == ticks
+    assert names.index("stream.tick") > names.index("iteration")
+    assert [f["tick"] for n, f in rec.events if n == "stream.tick"] \
+        == list(range(ticks))
 
 
 # ================================================================ bench_diff
