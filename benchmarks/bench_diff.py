@@ -23,12 +23,23 @@ judged by class:
   improvement;
 * **tolerances**: a row whose ``tol`` *loosened* is a regression —
   widening the goalposts must not sneak past the diff;
-* **``rounds``**: exact — the communication-round count is determined by
-  (T, K); a drift means the algorithm changed, not the machine.
+* **``rounds``/``programs``/``cold_after_warmup``**: exact — the
+  communication-round count is determined by (T, K), the compiled-program
+  count by the tenant/request shape mix, and cold-after-warm-up by the
+  retrace contract; a drift means the algorithm or the caching contract
+  changed, not the machine.
 * **wire bytes** (``bytes_per_round``): strict one-sided — any increase
   is a regression (the byte count is a deterministic function of the
   wire dtype and shape, so even +1 byte means the wire contract
   changed); a decrease is an improvement.
+* **serving throughput** (``ticks_per_sec``, ``tenant_ticks_per_sec``,
+  ``req_per_sec``): one-sided *decrease* gate at the wall-clock ratio —
+  higher is better, so only a drop below ``baseline / us_ratio``
+  regresses;
+* **communication efficiency** (``rounds_per_tick``): one-sided
+  *increase* gate at a tight ratio (1.25x) — more gossip rounds per tick
+  means the warm-start or escalation policy got less effective, which no
+  amount of machine noise explains.
 
 ``speedup`` columns are ignored (a ratio of two wall-clocks double-counts
 timing noise), and so are the reference-baseline timings (``ref_us``,
@@ -52,9 +63,17 @@ from typing import Any, Dict, List
 WALLCLOCK_KEYS = ("us",)
 ACCURACY_KEYS = ("parity", "orth", "subspace_vs_qr", "final_tan",
                  "max_abs_diff")
-EXACT_KEYS = ("rounds",)
+EXACT_KEYS = ("rounds", "programs", "cold_after_warmup")
 #: Deterministic byte counts: any increase regresses, any decrease improves.
 BYTES_KEYS = ("bytes_per_round",)
+#: Serving throughput (higher is better): only a *drop* below
+#: baseline/us_ratio regresses — gains are improvements, never failures.
+THROUGHPUT_KEYS = ("ticks_per_sec", "tenant_ticks_per_sec", "req_per_sec")
+#: Communication-efficiency counters (lower is better): an *increase*
+#: beyond ROUNDS_RATIO regresses — round counts are policy-determined,
+#: not machine-noise-determined, so the gate is tight.
+ROUNDS_KEYS = ("rounds_per_tick",)
+ROUNDS_RATIO = 1.25
 
 #: Wall-clock ratio gate: candidate/baseline above this fails.
 DEFAULT_US_RATIO = 2.5
@@ -157,6 +176,35 @@ def diff(baseline: Dict[str, Any], candidate: Dict[str, Any], *,
                 regressions.append(
                     f"{name}: {key} changed {a[key]:g} -> {b[key]:g} "
                     "(must match exactly)")
+
+        for key in THROUGHPUT_KEYS:
+            if key not in a or key not in b:
+                continue
+            va, vb = float(a[key]), float(b[key])
+            if va <= 0.0:
+                continue
+            ratio = vb / va
+            if ratio < 1.0 / us_ratio:
+                regressions.append(
+                    f"{name}: {key} dropped {va:g} -> {vb:g} "
+                    f"({ratio:.2f}x < 1/{us_ratio:g} gate)")
+            elif ratio > us_ratio:
+                improvements.append(
+                    f"{name}: {key} {va:g} -> {vb:g} ({ratio:.2f}x)")
+
+        for key in ROUNDS_KEYS:
+            if key not in a or key not in b:
+                continue
+            va, vb = float(a[key]), float(b[key])
+            if va <= 0.0:
+                continue
+            if vb > va * ROUNDS_RATIO:
+                regressions.append(
+                    f"{name}: {key} grew {va:g} -> {vb:g} "
+                    f"(> {ROUNDS_RATIO:g}x gate — policy efficiency, "
+                    "not machine noise)")
+            elif vb < va / ROUNDS_RATIO:
+                improvements.append(f"{name}: {key} {va:g} -> {vb:g}")
 
         for key in BYTES_KEYS:
             if key not in a or key not in b:

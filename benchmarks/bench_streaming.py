@@ -1,6 +1,7 @@
-"""Streaming benchmarks: warm-start tracking value + batched-queue serving.
+"""Streaming benchmarks: warm tracking, batched queue, multi-tenant fleet.
 
-Two sections (both run by default; select with ``--drift`` / ``--queue``):
+Three sections (all run by default; select with ``--drift`` / ``--queue``
+/ ``--fleet``):
 
 * **drift** — the subsystem's headline claim: on a slow-rotation stream,
   a warm-started :class:`~repro.streaming.tracker.StreamingDeEPCA`
@@ -18,8 +19,18 @@ Two sections (both run by default; select with ``--drift`` / ``--queue``):
   no-per-request-recompilation acceptance property) and beats the naive
   driver-per-request server on throughput.
 
+* **fleet** — the multi-tenant headline: a mixed-shape tenant mix (10
+  distinct per-agent sample counts) served by
+  :class:`~repro.streaming.fleet.TrackerFleet` rides ≤2 compiled window
+  programs and beats the sequential one-solo-tracker-per-tenant loop on
+  ticks/sec, while a sampled subset of tenants is checked **bit-identical**
+  against solo :class:`StreamingDeEPCA` trackers fed the same padded
+  operators.
+
 ``--json PATH`` exports every row (CI uploads it next to the bench_mixing
-artifact); ``--quick`` shrinks shapes for smoke runs.
+artifact); ``--quick`` shrinks shapes for smoke runs.  Via
+``benchmarks/run.py --json`` the fleet/queue/drift rows land in the
+committed ``BENCH_streaming.json`` snapshot that ``bench_diff.py`` gates.
 """
 from __future__ import annotations
 
@@ -35,12 +46,14 @@ from repro.core import (ConsensusEngine, IterationDriver, PowerStep,
                         erdos_renyi, metrics)
 from repro.streaming import (AdmissionPolicy, DriftPolicy, PCAService,
                              SlowRotationStream, StreamingDeEPCA,
-                             ragged_requests)
+                             TrackerFleet, ragged_requests)
 
 FULL = dict(m=8, d=64, k=4, n=48, K=5, rate=0.04, ticks=8, chunk=2,
-            T_max=40, target=2e-3, requests=32, T_serve=12)
+            T_max=40, target=2e-3, requests=32, T_serve=12,
+            tenants=64, slots=32, fleet_ticks=4, solo_n=8)
 QUICK = dict(m=8, d=32, k=3, n=32, K=4, rate=0.04, ticks=4, chunk=2,
-             T_max=30, target=5e-3, requests=10, T_serve=8)
+             T_max=30, target=5e-3, requests=10, T_serve=8,
+             tenants=8, slots=4, fleet_ticks=2, solo_n=4)
 
 
 # ------------------------------------------------------- drift: warm vs cold
@@ -177,11 +190,158 @@ def bench_queue(cfg, markdown: bool = True):
     return out
 
 
+# -------------------------------------------------- fleet: vmapped tenants
+
+#: Both fleet and the sequential baseline run drift-passive: every tick is
+#: exactly one T_tick window, so the comparison isolates launch/dispatch
+#: amortization and the bit-identity check is exact (no decision paths).
+_PASSIVE = DriftPolicy(jump=float("inf"), restart=float("inf"),
+                       max_escalations=0)
+
+
+def _pad_tick_ops(ops, n_pad: int):
+    """Zero-row pad a data-operator tick to the fleet's bucket width (the
+    solo baseline must see the exact operators the fleet's slot sees for
+    the bitwise comparison to be meaningful)."""
+    from repro.core.operators import StackedOperators
+    n = ops.data.shape[1]
+    if n == n_pad:
+        return ops
+    return StackedOperators(
+        data=jnp.pad(ops.data, ((0, 0), (0, n_pad - n), (0, 0))))
+
+
+def bench_fleet(cfg, markdown: bool = True):
+    m, d, k = cfg["m"], cfg["d"], cfg["k"]
+    N, T_tick, K = cfg["tenants"], cfg["chunk"], cfg["K"]
+    n_ticks = cfg["fleet_ticks"]
+    topo = erdos_renyi(m, p=0.5, seed=0)
+
+    # 10 distinct per-agent sample counts -> pad_n=16 buckets collapse the
+    # mix onto two compiled window programs
+    ns = [max(k + 2, cfg["n"] - 8 + 2 * (i % 10)) for i in range(N)]
+    streams = [SlowRotationStream(m=m, d=d, k=k, n_per_agent=ns[i],
+                                  rate=cfg["rate"], seed=i)
+               for i in range(N)]
+    tids = [f"t{i:03d}" for i in range(N)]
+
+    fleet = TrackerFleet(k=k, T_tick=T_tick, K=K, topology=topo,
+                         backend="stacked", policy=_PASSIVE,
+                         slots=cfg["slots"])
+    for tid, st, n in zip(tids, streams, ns):
+        fleet.join(tid, st.init_W0(), n=n)
+
+    # materialize every tick up front so both sides consume identical data
+    # and neither side pays generation cost inside the timed region
+    iters = [st.ticks(n_ticks + 1) for st in streams]
+    ticks = [[next(it) for it in iters] for _ in range(n_ticks + 1)]
+
+    fleet.tick({tid: ticks[0][i] for i, tid in enumerate(tids)})  # warm-up
+    rounds = []
+    t0 = time.perf_counter()
+    for t in range(1, n_ticks + 1):
+        rep = fleet.tick({tid: ticks[t][i] for i, tid in enumerate(tids)})
+        rounds.extend(r.comm_rounds for r in rep.tenants.values())
+    dt_fleet = time.perf_counter() - t0
+    cold_after = rep.cold_launches
+
+    # sequential baseline: the pre-fleet serving story — one solo tracker
+    # (own driver, own compiled program) per tenant, ticked in a Python
+    # loop.  solo_n trackers are timed and scaled to N; the same trackers
+    # provide the bit-identity reference (fed the fleet's padded ops).
+    solo_n = min(N, cfg["solo_n"])
+    n_pads = [fleet.bucket_of(d, k, ns[i])[3] for i in range(solo_n)]
+    padded = [[_pad_tick_ops(ticks[t][i].ops, n_pads[i])
+               for i in range(solo_n)] for t in range(n_ticks + 1)]
+    solos = [StreamingDeEPCA(k=k, T_tick=T_tick, K=K, topology=topo,
+                             backend="stacked", W0=streams[i].init_W0(),
+                             policy=_PASSIVE)
+             for i in range(solo_n)]
+    for i, tr in enumerate(solos):                                # warm-up
+        tr.tick(padded[0][i], ticks[0][i].U)
+    t0 = time.perf_counter()
+    for t in range(1, n_ticks + 1):
+        for i, tr in enumerate(solos):
+            tr.tick(padded[t][i], ticks[t][i].U)
+    dt_seq = (time.perf_counter() - t0) * N / solo_n
+
+    bitwise = [bool(np.array_equal(np.asarray(fleet.tenant_W(tids[i])),
+                                   np.asarray(solos[i].W)))
+               for i in range(solo_n)]
+    out = {
+        "name": f"fleet_mixed_{N}", "tenants": N,
+        "shapes": len(set(ns)), "programs": fleet.program_count,
+        "cold_after_warmup": cold_after,
+        "ticks_per_sec": n_ticks / dt_fleet,
+        "tenant_ticks_per_sec": N * n_ticks / dt_fleet,
+        "sequential_tenant_ticks_per_sec": N * n_ticks / dt_seq,
+        "speedup_vs_sequential": dt_seq / dt_fleet,
+        "rounds_per_tick": float(np.mean(rounds)),
+        "bitwise_checked": solo_n, "ok": all(bitwise),
+    }
+    if markdown:
+        print(f"\n### Multi-tenant fleet ({N} tenants, {out['shapes']} "
+              f"shapes, m={m} d={d} k={k} T_tick={T_tick} K={K})\n")
+        print(f"compiled window programs for the whole mix: "
+              f"{out['programs']} (cold after warm-up: {cold_after})")
+        print(f"fleet: {out['ticks_per_sec']:.1f} ticks/s "
+              f"({out['tenant_ticks_per_sec']:.0f} tenant-ticks/s) | "
+              f"sequential solo loop (est from {solo_n}): "
+              f"{out['sequential_tenant_ticks_per_sec']:.0f} "
+              f"tenant-ticks/s -> **{out['speedup_vs_sequential']:.1f}x**")
+        print(f"bit-identity vs {solo_n} solo trackers: "
+              f"{'PASS' if out['ok'] else 'FAIL'}; "
+              f"{out['rounds_per_tick']:.0f} comm rounds/tenant-tick")
+    return out
+
+
+# ------------------------------------------------------------- aggregation
+
+def rows_from_sections(drift=None, queue=None, fleet=None):
+    """Flatten section reports into named ``bench_diff``-gateable rows."""
+    rows = []
+    if drift is not None:
+        s = drift["summary"]
+        rows.append({"name": "tracking_warm_vs_cold",
+                     "rounds_per_tick": s["mean_warm_rounds"],
+                     "cold_rounds_per_tick": s["mean_cold_rounds"],
+                     "round_savings": s["round_savings"]})
+    if queue is not None:
+        rows.append({"name": "queue_ragged",
+                     "req_per_sec": queue["queue_req_s"],
+                     "programs": queue["programs_compiled"],
+                     "cold_after_warmup":
+                         queue["cold_launches_after_warmup"],
+                     "ok": queue["cold_launches_after_warmup"] == 0})
+    if fleet is not None:
+        rows.append(fleet)
+    return rows
+
+
+def main(writer, quick: bool = False):
+    """``benchmarks/run.py`` entry: CSV rows out, JSON snapshot rows back."""
+    cfg = dict(QUICK if quick else FULL)
+    drift = bench_drift(cfg, markdown=False)
+    queue = bench_queue(cfg, markdown=False)
+    fleet = bench_fleet(cfg, markdown=False)
+    s = drift["summary"]
+    writer.writerow(["streaming_warm_tracking", "",
+                     f"{s['round_savings']:.2f}x fewer comm rounds"])
+    writer.writerow(["streaming_queue", f"{1e6 / queue['queue_req_s']:.0f}",
+                     f"{queue['queue_req_s']:.1f} req/s, "
+                     f"{queue['programs_compiled']} programs"])
+    writer.writerow(["streaming_fleet",
+                     f"{1e6 / fleet['tenant_ticks_per_sec']:.0f}",
+                     f"{fleet['speedup_vs_sequential']:.1f}x vs sequential, "
+                     f"{fleet['programs']} programs"])
+    return rows_from_sections(drift, queue, fleet)
+
+
 if __name__ == "__main__":
     quick = "--quick" in sys.argv
     cfg = dict(QUICK if quick else FULL)
-    sections = {s for s in ("--drift", "--queue") if s in sys.argv} or \
-        {"--drift", "--queue"}
+    sections = {s for s in ("--drift", "--queue", "--fleet")
+                if s in sys.argv} or {"--drift", "--queue", "--fleet"}
     json_path = None
     if "--json" in sys.argv:
         # validate BEFORE the (long) benchmark runs, not after
@@ -194,6 +354,8 @@ if __name__ == "__main__":
         report["drift"] = bench_drift(cfg)
     if "--queue" in sections:
         report["queue"] = bench_queue(cfg)
+    if "--fleet" in sections:
+        report["fleet"] = bench_fleet(cfg)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=2)

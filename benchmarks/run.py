@@ -7,11 +7,14 @@ Prints ``name,us_per_call,derived`` CSV to stdout.
   bench_kernels     -- Pallas kernels vs jnp oracle + v5e roofline, CholeskyQR2
                        vs Householder, and the per-iteration step breakdown
   bench_compression -- DeEPCA-PowerSGD wire bytes + fidelity
+  bench_streaming   -- warm tracking, batched queue, multi-tenant fleet
 
 ``--json`` additionally writes the perf-trajectory files —
 ``BENCH_kernels.json`` (kernel + per-stage step breakdown: apply,
-mix+track, orth, full seed-vs-fast path) and ``BENCH_deepca.json``
-(paper-workload convergence + its stage breakdown) — at the **repo root**
+mix+track, orth, full seed-vs-fast path), ``BENCH_deepca.json``
+(paper-workload convergence + its stage breakdown) and
+``BENCH_streaming.json`` (fleet-vs-sequential throughput, queue serving,
+warm-start round savings) — at the **repo root**
 by default (the committed regression baselines ``bench_diff.py`` gates
 against), or under ``--out DIR`` for fresh CI copies.  Each export is
 stamped with ``RuntimeConfig.describe()`` provenance (resolved knobs, raw
@@ -36,11 +39,13 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def _import_benches():
     try:        # module style: python -m benchmarks.run
         from . import (bench_compression, bench_deepca, bench_kernels,
-                       bench_mixing)
+                       bench_mixing, bench_streaming)
     except ImportError:   # script style: python benchmarks/run.py
         sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
         import bench_compression, bench_deepca, bench_kernels, bench_mixing
-    return bench_compression, bench_deepca, bench_kernels, bench_mixing
+        import bench_streaming
+    return (bench_compression, bench_deepca, bench_kernels, bench_mixing,
+            bench_streaming)
 
 
 def provenance() -> dict:
@@ -64,21 +69,23 @@ def main(argv=None) -> None:
     quick = "--quick" in argv
     want_json = "--json" in argv
     out_dir = _arg_value(argv, "--out", REPO_ROOT)
-    bench_compression, bench_deepca, bench_kernels, bench_mixing = \
-        _import_benches()
+    (bench_compression, bench_deepca, bench_kernels, bench_mixing,
+     bench_streaming) = _import_benches()
     writer = csv.writer(sys.stdout)
     writer.writerow(["name", "us_per_call", "derived"])
     bench_mixing.main(writer)
     kernel_rows = bench_kernels.main(writer, quick=quick)
     bench_compression.main(writer)
     deepca_rows = bench_deepca.main(writer, quick=quick)
+    streaming_rows = bench_streaming.main(writer, quick=quick)
     if want_json:
         from repro.kernels import autotune
         device = autotune.device_kind()
         os.makedirs(out_dir, exist_ok=True)
         for fname, bench, rows in (
                 ("BENCH_kernels.json", "kernels", kernel_rows),
-                ("BENCH_deepca.json", "deepca", deepca_rows)):
+                ("BENCH_deepca.json", "deepca", deepca_rows),
+                ("BENCH_streaming.json", "streaming", streaming_rows)):
             path = os.path.join(out_dir, fname)
             with open(path, "w") as f:
                 json.dump({"bench": bench, "device": device, "quick": quick,

@@ -140,6 +140,32 @@ COMPUTE_SITES: Tuple[ComputeSite, ...] = (
             "by fault tolerance and the streaming tracker",
     ),
     ComputeSite(
+        name="fleet-select-carry",
+        pattern="def",
+        definition=("repro/streaming/fleet.py", "select_carry"),
+        allowed=frozenset({
+            ("repro/streaming/fleet.py", "select_carry"),
+        }),
+        doc="the fleet's masked per-slot carry update (the branchless "
+            "restart/escalation select over the batched tracker state) "
+            "must have exactly one definition, "
+            "repro.streaming.fleet.select_carry — a second mask rule "
+            "forks which tenants a drift pass actually touches",
+    ),
+    ComputeSite(
+        name="fleet-scatter-carry",
+        pattern="def",
+        definition=("repro/streaming/fleet.py", "scatter_carry"),
+        allowed=frozenset({
+            ("repro/streaming/fleet.py", "scatter_carry"),
+        }),
+        doc="the fleet's slot admission scatter (join/evict writes into "
+            "the batched carry) must have exactly one definition, "
+            "repro.streaming.fleet.scatter_carry; restart arithmetic "
+            "itself stays home in repro.core.step.rebase_carry — the "
+            "fleet adds no second home for it",
+    ),
+    ComputeSite(
         name="diag-observables",
         pattern="def",
         definition=("repro/runtime/diagnostics.py", "diag_vector"),
@@ -166,6 +192,8 @@ RESERVED_DEFS = {
     "ef_transmit": ("repro/compression/ef.py",),
     "rebase_carry": ("repro/core/step.py",),
     "diag_vector": ("repro/runtime/diagnostics.py",),
+    "select_carry": ("repro/streaming/fleet.py",),
+    "scatter_carry": ("repro/streaming/fleet.py",),
     "qr_orth": ("repro/core/step.py", "repro/kernels/cholqr.py"),
     # kernels/ops.py holds the public delegating wrapper (same seam)
     "cholqr2": ("repro/kernels/cholqr.py", "repro/kernels/ops.py"),

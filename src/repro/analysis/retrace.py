@@ -255,6 +255,56 @@ def _build_diag_run():
     return warmup, steady
 
 
+def _build_fleet_warm():
+    """Warm fleet ticks — including tenant join/leave churn, in-batch
+    restarts and escalation windows — are masked selects and slot
+    scatters on compiled programs: ZERO steady-state compiles.
+
+    The warm-up phase deliberately exercises every eager program the
+    fleet can reach (both shape buckets' base windows, the vmapped
+    restart rebase, the escalation window, the stats program, and the
+    join/leave scatter ops) so the counted phase proves the
+    membership-churn-never-retraces contract, not first-call compiles.
+    """
+    from repro.streaming import (DriftPolicy, SlowRotationStream,
+                                 TrackerFleet)
+    from repro.core.topology import ring
+
+    m = 6
+    # hair-trigger policy: every tick restarts AND escalates, so the
+    # masked drift passes compile during warm-up and must stay warm
+    hot = DriftPolicy(jump=1e-9, restart=1e-9, target=1e-12,
+                      max_escalations=1)
+    fleet = TrackerFleet(k=3, T_tick=2, K=3, topology=ring(m),
+                         backend="stacked", policy=hot, slots=2)
+    sa = SlowRotationStream(m=m, d=16, k=3, n_per_agent=20, seed=0,
+                            rate=0.05)
+    sb = SlowRotationStream(m=m, d=16, k=3, n_per_agent=36, seed=1,
+                            rate=0.05)          # second shape bucket
+    fleet.join("a", sa.init_W0(), n=20)
+    fleet.join("b", sb.init_W0(), n=36)
+
+    def items(t):
+        # whatever the current membership is, feed exactly those tenants
+        return {tid: (sa if tid == "a" else sb).tick(t)
+                for tid in fleet.tenants}
+
+    def warmup():
+        fleet.tick(items(0))
+        fleet.tick(items(1))        # restart + escalation programs
+        fleet.leave("b")            # churn: evict ...
+        fleet.join("b2", sb.init_W0(), n=36)   # ... re-admit same slot
+        fleet.tick(items(2))
+
+    def steady():
+        fleet.leave("b2")
+        fleet.join("b", sb.init_W0(), n=36)
+        for t in (3, 4):
+            fleet.tick(items(t))
+
+    return warmup, steady
+
+
 CONTRACTS = (
     RetraceContract("dynamic-same-m-swap", _build_dynamic_swap,
                     doc="graph L is a traced operand"),
@@ -269,6 +319,9 @@ CONTRACTS = (
     RetraceContract("diag-run-warm", _build_diag_run,
                     doc="diag observables ride the cached scan program "
                         "(cache keyed (T, kind, spec))"),
+    RetraceContract("fleet-warm", _build_fleet_warm,
+                    doc="fleet join/leave/restart/escalation are slot "
+                        "scatters and masked selects on warm programs"),
 )
 
 

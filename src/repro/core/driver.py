@@ -463,7 +463,8 @@ class IterationDriver:
     # ----------------------------------------------- batched multi-problem
     def run_batch(self, ops_batch, W0, *, T: int,
                   t0: Optional[Sequence[int]] = None,
-                  with_history: bool = False) -> BatchRun:
+                  with_history: bool = False,
+                  carry: Optional[Carry] = None) -> BatchRun:
         """One compiled program serving B independent PCA problems.
 
         The per-problem scan is ``vmap``-ped over a leading problem axis, so
@@ -488,6 +489,16 @@ class IterationDriver:
             engines.
           with_history: also return the ``(B, T, m, d, k)`` iterate
             histories (costly at scale; off for pure serving).
+          carry: resume all B problems from a previous window's
+            :attr:`BatchRun.carries` — a carry tuple whose every element
+            has a leading ``(B, ...)`` problem axis.  This is the batched
+            stream substrate: resumed windows over B concurrent drifting
+            problems through ONE compiled program (what
+            :class:`repro.streaming.fleet.TrackerFleet` ticks on).  Like
+            :meth:`run`, a bare 3-slot ``(S, W, G_prev)`` is
+            zero-extended to the step's slot layout and cast to the run
+            dtype.  Resume and cold-start compile as sibling cache
+            entries, so mixing them never retraces either.
 
         The gossip math runs in stacked/traced form (``shard_map`` cannot be
         vmapped over problems — devices are a physical axis); the tracking
@@ -508,6 +519,16 @@ class IterationDriver:
         if W0.ndim == 2:
             W0 = jnp.broadcast_to(W0, (B,) + W0.shape)
         dt = jnp.result_type(W0.dtype, arr.dtype)
+        resume = carry is not None
+        if resume:
+            carry = step.normalize_carry(
+                tuple(jnp.asarray(x).astype(dt) for x in carry))
+            bad = [tuple(x.shape) for x in carry if x.shape[:1] != (B,)]
+            if bad:
+                raise ValueError(
+                    f"resume carry needs a leading problem axis B={B} on "
+                    f"every slot; got shapes {bad}")
+        resumed: Tuple[jax.Array, ...] = tuple(carry) if resume else ()
 
         if self.dynamic is not None:
             offs = [0] * B if t0 is None else [int(x) for x in t0]
@@ -520,15 +541,17 @@ class IterationDriver:
                 ops_all.append((Ls_b, etas_b))
             Ls = jnp.stack([o[0] for o in ops_all])
             etas = jnp.stack([o[1] for o in ops_all])
-            fn, warm = self._batch_fn(T, kind, with_history, dynamic=True)
+            fn, warm = self._batch_fn(T, kind, with_history, dynamic=True,
+                                      resume=resume)
             with tracing.span("driver.launch", substrate="vmap", T=int(T),
                               warm=warm):
-                out = fn(arr, W0, Ls, etas)
+                out = fn(arr, W0, Ls, etas, *resumed)
         else:
-            fn, warm = self._batch_fn(T, kind, with_history, dynamic=False)
+            fn, warm = self._batch_fn(T, kind, with_history, dynamic=False,
+                                      resume=resume)
             with tracing.span("driver.launch", substrate="vmap", T=int(T),
                               warm=warm):
-                out = fn(arr, W0)
+                out = fn(arr, W0, *resumed)
         carry, hists, dvals = out
         diag = dvals if self.diagnostics is not None else None
         S, W, G_prev = carry[:3]
@@ -576,9 +599,9 @@ class IterationDriver:
         return kind, jnp.stack([o.array for o in ops_batch])
 
     def _batch_fn(self, T: int, kind: str, with_history: bool,
-                  dynamic: bool):
+                  dynamic: bool, resume: bool = False):
         spec = self.diagnostics
-        key = (T, kind, with_history, dynamic, spec)
+        key = (T, kind, with_history, dynamic, resume, spec)
         fn = self._batch_cache.get(key)
         warm = fn is not None
         telemetry.emit("launch", source="driver.run_batch", substrate="vmap",
@@ -591,10 +614,10 @@ class IterationDriver:
             hists = (ys[0], ys[1]) if with_history else ()
             return carry, hists, (ys[2] if spec is not None else ())
 
-        def one_static(arr, W0_b):
+        def one_static(arr, W0_b, *carry_in):
             ops_b = (StackedOperators(dense=arr) if kind == "dense"
                      else StackedOperators(data=arr))
-            carry = step.init_carry(ops_b, W0_b)
+            carry = carry_in if resume else step.init_carry(ops_b, W0_b)
             mix = step.make_mix(eng)
             apply_mix = step.make_apply_mix(eng, ops_b)
 
@@ -608,10 +631,10 @@ class IterationDriver:
             carry, ys = jax.lax.scan(body, carry, None, length=T)
             return split_ys(carry, ys)
 
-        def one_dynamic(arr, W0_b, Ls_b, etas_b):
+        def one_dynamic(arr, W0_b, Ls_b, etas_b, *carry_in):
             ops_b = (StackedOperators(dense=arr) if kind == "dense"
                      else StackedOperators(data=arr))
-            carry = step.init_carry(ops_b, W0_b)
+            carry = carry_in if resume else step.init_carry(ops_b, W0_b)
 
             def body(c, xs):
                 L_t, eta_t = xs

@@ -158,3 +158,78 @@ class PrefetchIterator:
             self.close()
         except Exception:
             pass        # interpreter teardown: daemon thread dies anyway
+
+
+class MultiStreamPrefetcher:
+    """N named prefetch lanes with bounded per-stream queues.
+
+    The multi-stream generalization of :class:`PrefetchIterator` (the
+    async-ingest front-end under ``repro.streaming.fleet``'s multi-tenant
+    tick loop).  The single-queue composition — interleaving N sources
+    into one iterator and prefetching that — has two failure modes this
+    class removes *by construction*:
+
+    * closing one stream drained the shared queue, dropping every other
+      stream's already-prefetched items; here :meth:`close` with a name
+      touches only that lane's private queue;
+    * one slow consumer filled the shared queue and stalled ingest for
+      everyone; here each lane has its own bounded queue and worker, so
+      backpressure is strictly per-tenant (property-tested in
+      ``tests/test_streaming.py``).
+
+    ``depth`` bounds each lane's queue, so total buffered memory is
+    ``N * depth`` items regardless of consumer skew.
+    """
+
+    def __init__(self, its: Dict[str, Iterator], depth: int = 2):
+        self._lanes: Dict[str, PrefetchIterator] = {
+            name: PrefetchIterator(it, depth) for name, it in its.items()}
+
+    @property
+    def streams(self) -> tuple:
+        return tuple(self._lanes)
+
+    def add(self, name: str, it: Iterator, depth: int = 2) -> None:
+        """Open a new lane (tenant admission on the ingest side)."""
+        if name in self._lanes:
+            raise ValueError(f"stream {name!r} already open")
+        self._lanes[name] = PrefetchIterator(it, depth)
+
+    def get(self, name: str):
+        """Next item of one lane (blocking); raises ``StopIteration`` when
+        that lane is exhausted or closed — other lanes are unaffected."""
+        return next(self._lanes[name])
+
+    def tick(self) -> Dict[str, object]:
+        """One item from EVERY open lane — the fleet-tick ingest shape.
+
+        Lanes that are exhausted are closed and dropped from the result
+        (and from subsequent ticks); live lanes are never skipped, so a
+        fleet consuming this dict always covers exactly its open tenants.
+        """
+        out, done = {}, []
+        for name, lane in self._lanes.items():
+            try:
+                out[name] = next(lane)
+            except StopIteration:
+                done.append(name)
+        for name in done:
+            self.close(name)
+        return out
+
+    def close(self, name: Optional[str] = None) -> None:
+        """Close one lane (by name) or every lane (no name); idempotent.
+        Per-lane close drains only that lane's private queue."""
+        if name is not None:
+            lane = self._lanes.pop(name, None)
+            if lane is not None:
+                lane.close()
+            return
+        for lane_name in list(self._lanes):
+            self.close(lane_name)
+
+    def __enter__(self) -> "MultiStreamPrefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

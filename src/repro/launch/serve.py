@@ -26,6 +26,17 @@ Three workloads share this entry point:
       PYTHONPATH=src python -m repro.launch.serve --workload pca-stream \
           --m 8 --d 64 --k-top 4 --ticks 8 --tick-iters 3 --rounds 5 \
           --requests 24 --max-batch 8
+
+* ``--workload pca-fleet`` — multi-tenant fleet serving: ``--tenants``
+  independent drifting streams (a mixed-shape tenant mix) ride ONE
+  compiled window program per padded-shape bucket through
+  :class:`~repro.streaming.fleet.TrackerFleet`, with threaded per-tenant
+  ingest (:class:`~repro.data.synthetic.MultiStreamPrefetcher`) and
+  mid-run join/leave churn demonstrating the zero-retrace slot pool::
+
+      PYTHONPATH=src python -m repro.launch.serve --workload pca-fleet \
+          --m 8 --d 48 --k-top 3 --tenants 12 --ticks 8 --tick-iters 3 \
+          --rounds 5
 """
 from __future__ import annotations
 
@@ -213,10 +224,92 @@ def serve_pca_stream(args) -> None:
           f"mean={float(np.mean(tans)):.3e}")
 
 
+def serve_pca_fleet(args) -> None:
+    """Fleet workload: N drifting tenants, one program per shape bucket."""
+    from repro.core import erdos_renyi
+    from repro.data.synthetic import MultiStreamPrefetcher
+    from repro.streaming import DriftPolicy, SlowRotationStream, TrackerFleet
+
+    m, d, k = args.m, args.d, args.k_top
+    topo = erdos_renyi(m, p=0.5, seed=args.seed)
+    wire = args.wire_dtype if args.wire_dtype is not None \
+        else ("bf16" if args.wire_bf16 else None)
+    if wire in ("none", "fp32"):
+        wire = None
+    fleet = TrackerFleet(
+        k=k, T_tick=args.tick_iters, K=args.rounds, topology=topo,
+        backend="stacked", policy=DriftPolicy(target=args.target),
+        slots=args.slots, slo_ms=args.slo_ms,
+        accelerated=args.accel or None, momentum=args.momentum,
+        wire_dtype=wire, diagnostics=args.diag)
+
+    # mixed-shape tenant mix: 10 distinct per-agent sample counts that the
+    # pad_n=16 bucketing collapses onto two compiled window programs
+    def tenant_n(i: int) -> int:
+        return max(k + 2, args.n_per_agent - 8 + 2 * (i % 10))
+
+    streams = {}
+    for i in range(args.tenants):
+        tid = f"tenant{i:03d}"
+        streams[tid] = SlowRotationStream(
+            m=m, d=d, k=k, n_per_agent=tenant_n(i), rate=args.drift_rate,
+            seed=args.seed + i)
+        fleet.join(tid, streams[tid].init_W0(), n=tenant_n(i))
+    shapes = sorted({tenant_n(i) for i in range(args.tenants)})
+    print(f"[fleet] m={m} d={d} k={k} tenants={args.tenants} "
+          f"n-shapes={shapes} T_tick={args.tick_iters} K={args.rounds}")
+
+    half = max(1, args.ticks // 2)
+    steady_cold = n_steady = 0
+    t0 = time.perf_counter()
+    with MultiStreamPrefetcher(
+            {tid: st.ticks(args.ticks) for tid, st in streams.items()},
+            depth=2) as mux:
+        rep = fleet.tick(mux.tick())        # warm-up: compiles the buckets
+        print(f"[fleet] warm-up tick: {rep.cold_launches} cold compiles, "
+              f"programs={fleet.program_count}")
+        t0 = time.perf_counter()
+        for t in range(1, args.ticks):
+            if t == half:
+                # membership churn mid-run: evict one tenant and admit a
+                # fresh one into the vacated slot — zero retraces
+                old = next(iter(fleet.tenants))
+                n_old = streams[old].n_per_agent
+                fleet.leave(old)
+                mux.close(old)
+                joiner = SlowRotationStream(
+                    m=m, d=d, k=k, n_per_agent=n_old,
+                    rate=args.drift_rate, seed=args.seed + 9999)
+                streams["joiner"] = joiner
+                mux.add("joiner", joiner.ticks(args.ticks - t), depth=2)
+                fleet.join("joiner", joiner.init_W0(), n=n_old)
+                print(f"[fleet] tick {t}: churn — evicted {old}, "
+                      f"admitted joiner (same bucket slot)")
+            rep = fleet.tick(mux.tick())
+            steady_cold += rep.cold_launches
+            n_steady += 1
+            worst = max(rep.tenants.values(), key=lambda r: r.stat)
+            print(f"[fleet] tick {t}: windows={rep.windows} "
+                  f"warm={rep.warm_launches} cold={rep.cold_launches} "
+                  f"worst tan_theta={worst.stat:.2e} ({worst.tenant}) "
+                  f"{rep.latency_ms:.1f} ms")
+    dt = time.perf_counter() - t0
+    n_ten = len(fleet.tenants)
+    print(f"[fleet] {n_steady} steady ticks x {n_ten} tenants in {dt:.2f}s "
+          f"({n_steady / dt:.1f} fleet ticks/s, "
+          f"{n_steady * n_ten / dt:.1f} tenant-ticks/s)")
+    print(f"[fleet] programs={fleet.program_count} "
+          f"steady cold launches={steady_cold}")
+    s = fleet.stats
+    print(f"[fleet] joins={s['joins']} leaves={s['leaves']} "
+          f"restarts={s['restarts']} escalations={s['escalations']} "
+          f"slo_breaches={s['slo_breaches']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="lm",
-                    choices=["lm", "pca", "pca-stream"])
+                    choices=["lm", "pca", "pca-stream", "pca-fleet"])
     ap.add_argument("--arch", default="smollm_135m")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -262,6 +355,15 @@ def main() -> None:
                     help="admission policy: batch-size cap")
     ap.add_argument("--max-wait", type=float, default=0.01,
                     help="admission policy: max queue wait (s)")
+    # --workload pca-fleet knobs
+    ap.add_argument("--tenants", type=int, default=12,
+                    help="concurrent drifting streams in the fleet")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="fleet slot-pool capacity per shape bucket "
+                         "(default: $REPRO_FLEET_SLOTS or 8)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="fleet per-tick latency objective in ms "
+                         "(default: $REPRO_FLEET_SLO_MS; unset disables)")
     ap.add_argument("--telemetry", default=None, metavar="SPEC",
                     help="event sink: 'null', 'log', 'jsonl:PATH', or "
                          "'jsonl+buffer:PATH' (default: $REPRO_TELEMETRY "
@@ -305,6 +407,8 @@ def main() -> None:
                 serve_pca(args)
             elif args.workload == "pca-stream":
                 serve_pca_stream(args)
+            elif args.workload == "pca-fleet":
+                serve_pca_fleet(args)
             else:
                 serve_lm(args)
     finally:

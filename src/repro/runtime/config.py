@@ -54,11 +54,16 @@ ENV_ACCEL = "REPRO_ACCEL"
 ENV_DIAG = "REPRO_DIAG"
 #: Span-tracing spec: 'off' | 'jax' | 'chrome:PATH' | 'chrome+jax:PATH'.
 ENV_TRACE = "REPRO_TRACE"
+#: TrackerFleet slot-pool capacity per bucket (positive int).
+ENV_FLEET_SLOTS = "REPRO_FLEET_SLOTS"
+#: TrackerFleet per-tick latency objective in milliseconds (positive float).
+ENV_FLEET_SLO_MS = "REPRO_FLEET_SLO_MS"
 
 #: Every env var this module owns, in field order of :class:`RuntimeConfig`.
 ENV_VARS: Tuple[str, ...] = (ENV_QR_IMPL, ENV_FASTMIX_BLOCK_N, ENV_AUTOTUNE,
                              ENV_AUTOTUNE_CACHE, ENV_TELEMETRY,
-                             ENV_WIRE_DTYPE, ENV_ACCEL, ENV_DIAG, ENV_TRACE)
+                             ENV_WIRE_DTYPE, ENV_ACCEL, ENV_DIAG, ENV_TRACE,
+                             ENV_FLEET_SLOTS, ENV_FLEET_SLO_MS)
 
 QR_IMPLS = ("cholqr2", "householder")
 WIRE_DTYPES = ("bf16", "int8", "fp8")
@@ -177,6 +182,19 @@ def _parse_trace(raw: Optional[str]) -> Optional[str]:
         f"'off', got {raw!r}")
 
 
+def _parse_positive_float(raw: Optional[str], env: str) -> Optional[float]:
+    if raw is None or raw == "":
+        return None
+    try:
+        val = float(raw)
+    except ValueError as e:
+        raise ValueError(
+            f"{env} must be a positive number, got {raw!r}") from e
+    if val <= 0:
+        raise ValueError(f"{env} must be a positive number, got {raw!r}")
+    return val
+
+
 def _parse_bool(raw: Optional[str], env: str) -> bool:
     if raw is None:
         return False
@@ -222,6 +240,12 @@ class RuntimeConfig:
     #: Span-tracing spec (``None`` -> off) consumed by
     #: :func:`repro.runtime.tracing.tracer_from_spec`.
     trace: Optional[str] = None
+    #: :class:`repro.streaming.fleet.TrackerFleet` slot-pool capacity per
+    #: shape bucket; ``None`` -> the fleet's built-in default (8).
+    fleet_slots: Optional[int] = None
+    #: Fleet per-tick latency objective (milliseconds); ``None`` -> SLO
+    #: accounting off.
+    fleet_slo_ms: Optional[float] = None
 
     def describe(self) -> Dict[str, Any]:
         """JSON-serializable provenance snapshot: the resolved knobs, the
@@ -263,7 +287,7 @@ def from_env() -> RuntimeConfig:
     consumer loudly rather than just the one that happens to read it.
     """
     (raw_qr, raw_block, raw_auto, raw_cache, raw_tel, raw_wire,
-     raw_accel, raw_diag, raw_trace) = _env_snapshot()
+     raw_accel, raw_diag, raw_trace, raw_slots, raw_slo) = _env_snapshot()
     return RuntimeConfig(
         qr_impl=_parse_qr_impl(raw_qr),
         fastmix_block_n=_parse_positive_int(raw_block, ENV_FASTMIX_BLOCK_N),
@@ -274,6 +298,8 @@ def from_env() -> RuntimeConfig:
         accel=_parse_accel(raw_accel),
         diag=_parse_diag(raw_diag),
         trace=_parse_trace(raw_trace),
+        fleet_slots=_parse_positive_int(raw_slots, ENV_FLEET_SLOTS),
+        fleet_slo_ms=_parse_positive_float(raw_slo, ENV_FLEET_SLO_MS),
     )
 
 
@@ -314,6 +340,10 @@ def _validate_override(kwargs: Dict[str, Any]) -> Dict[str, Any]:
             out[name] = _parse_diag("on" if value is True else str(value))
         elif name == "trace":
             out[name] = _parse_trace(str(value))
+        elif name == "fleet_slots":
+            out[name] = _parse_positive_int(str(value), ENV_FLEET_SLOTS)
+        elif name == "fleet_slo_ms":
+            out[name] = _parse_positive_float(str(value), ENV_FLEET_SLO_MS)
         else:
             out[name] = str(value)
     return out
@@ -409,7 +439,9 @@ def configure(*,
               wire_dtype: Optional[str] = None,
               accel: Optional[Any] = None,
               diag: Optional[Any] = None,
-              trace: Optional[str] = None) -> RuntimeConfig:
+              trace: Optional[str] = None,
+              fleet_slots: Optional[int] = None,
+              fleet_slo_ms: Optional[float] = None) -> RuntimeConfig:
     """One-call process setup: x64 / platform / fake-device-count as
     first-class arguments, plus persistent ``REPRO_*`` knob assignment.
 
@@ -434,7 +466,9 @@ def configure(*,
              (ENV_WIRE_DTYPE, wire_dtype),
              (ENV_ACCEL, accel),
              (ENV_DIAG, diag),
-             (ENV_TRACE, trace))
+             (ENV_TRACE, trace),
+             (ENV_FLEET_SLOTS, fleet_slots),
+             (ENV_FLEET_SLO_MS, fleet_slo_ms))
     for env, val in knobs:
         if val is not None:
             if isinstance(val, bool):

@@ -36,6 +36,21 @@ event               fields
                     state away
 ``stream.escalation``  ``tick``, ``escalation`` (1-based count),
                     ``stat`` — drift policy demanded extra iterations
+``fleet.tick``      ``tick``, ``tenants``, ``windows`` (program launches
+                    this tick), ``warm``/``cold`` (launch split),
+                    ``latency_ms`` — one event per
+                    :meth:`~repro.streaming.fleet.TrackerFleet.tick`
+``fleet.tenant``    ``tenant``, ``tick``, ``bucket``, ``slot``,
+                    ``iterations``, ``comm_rounds``, ``stat``,
+                    ``jump_stat``, ``drift``, ``restarted``,
+                    ``escalations``, ``latency_ms``, ``slo_ok`` — the
+                    per-tenant mirror of ``stream.tick``
+``fleet.join``      ``tenant``, ``bucket``, ``slot``, ``grew`` (slot
+                    pool doubled to admit) — tenant admission
+``fleet.leave``     ``tenant``, ``bucket``, ``slot`` — tenant eviction
+                    (slot returns to the pool, no retrace)
+``fleet.restart``   ``tenant``, ``tick``, ``jump_stat`` — masked
+                    in-batch tracker restart
 ``autotune``        ``kernel``, ``param``, ``key``, ``hit``, ``value``
 ``diag``            ``source``, ``t``, ``floor`` (wire quantization
                     floor) plus the measured in-graph observables the

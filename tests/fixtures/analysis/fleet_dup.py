@@ -1,0 +1,17 @@
+"""Fixture: shadowing redefinitions of the fleet's batch-state seams.
+
+``select_carry`` (masked restart/escalation update) and ``scatter_carry``
+(slot admission write) are the single registered homes of the fleet's
+batched-carry arithmetic (``fleet-select-carry`` / ``fleet-scatter-carry``
+compute sites); redefining either name outside
+``repro/streaming/fleet.py`` forks which tenants a drift pass touches and
+must fire ``duplicate-compute-site``.
+"""
+
+
+def select_carry(mask, new, old):       # reserved-def shadow
+    return old
+
+
+def scatter_carry(carry, slot, values):  # reserved-def shadow
+    return carry

@@ -57,6 +57,8 @@ def test_lint_clean_on_repo_tree():
     ("host_sync.py", "host-sync", "item"),
     ("env_config.py", "env-config", "REPRO_"),
     ("diag_site.py", "duplicate-compute-site", "diag_vector"),
+    ("fleet_dup.py", "duplicate-compute-site", "select_carry"),
+    ("fleet_dup.py", "duplicate-compute-site", "scatter_carry"),
 ])
 def test_lint_fires_on_fixture(fixture, code, needle):
     r = lint.run(files=[_fixture(fixture)])
@@ -207,6 +209,16 @@ def test_retrace_driver_run_warm_zero_compiles():
     assert count == 0, messages
 
 
+def test_retrace_fleet_warm_zero_compiles():
+    """Regression pin: fleet membership churn (leave + re-join), in-batch
+    restarts and escalation windows are slot scatters and masked selects
+    on warm programs — steady-state fleet ticks must not re-enter XLA."""
+    contract = next(c for c in retrace.CONTRACTS
+                    if c.name == "fleet-warm")
+    count, messages = retrace.measure(contract)
+    assert count == 0, messages
+
+
 def test_retrace_diag_run_warm_zero_compiles():
     """Regression pin: warm driver.run repeats with in-graph diagnostics ON
     stay on one cached scan program — measuring must not cost steady-state
@@ -326,4 +338,5 @@ def test_fixture_files_are_committed():
     names = {os.path.basename(p)
              for p in glob.glob(os.path.join(FIXTURES, "*.py"))}
     assert {"dup_tracking_site.py", "direct_qr.py", "bare_assert.py",
-            "host_sync.py", "env_config.py", "diag_site.py"} <= names
+            "host_sync.py", "env_config.py", "diag_site.py",
+            "fleet_dup.py"} <= names

@@ -472,6 +472,82 @@ def test_prefetch_close_wakes_parked_consumer():
     release.set()                   # let the source thread finish
 
 
+def test_multistream_close_one_keeps_other_lanes_items():
+    """Per-stream close() must not drop queued items of other streams —
+    the failure mode of draining a shared queue."""
+    from repro.data.synthetic import MultiStreamPrefetcher
+
+    with MultiStreamPrefetcher({"a": iter(range(6)),
+                                "b": iter(range(100, 106))},
+                               depth=4) as mux:
+        assert mux.get("a") == 0
+        time.sleep(0.1)             # let both lanes fill their queues
+        mux.close("b")
+        assert mux.streams == ("a",)
+        # every remaining "a" item survives b's close
+        assert [mux.get("a") for _ in range(5)] == [1, 2, 3, 4, 5]
+        with pytest.raises(StopIteration):
+            mux.get("a")
+        with pytest.raises(KeyError):
+            mux.get("b")
+
+
+def test_multistream_backpressure_is_per_tenant():
+    """A slow consumer on one lane (its bounded queue stays full) must
+    never block ingest or consumption on the rest."""
+    import threading
+
+    from repro.data.synthetic import MultiStreamPrefetcher
+
+    pulled = {"fast": 0}
+
+    def fast_source():
+        for i in range(200):
+            pulled["fast"] = i
+            yield i
+
+    mux = MultiStreamPrefetcher({"slow": iter(range(1000)),
+                                 "fast": fast_source()}, depth=1)
+    try:
+        got = []
+
+        def consume_fast():
+            for _ in range(200):
+                got.append(mux.get("fast"))
+
+        t = threading.Thread(target=consume_fast, daemon=True)
+        t.start()
+        t.join(timeout=10.0)
+        assert not t.is_alive(), "slow lane backpressure stalled fast lane"
+        assert got == list(range(200))
+        assert pulled["fast"] == 199    # ingest kept up with the consumer
+    finally:
+        mux.close()
+
+
+def test_multistream_tick_covers_open_lanes_and_drops_exhausted():
+    from repro.data.synthetic import MultiStreamPrefetcher
+
+    mux = MultiStreamPrefetcher({"a": iter(range(3)), "b": iter(range(1))},
+                                depth=2)
+    try:
+        assert mux.tick() == {"a": 0, "b": 0}
+        # b exhausts: closed and dropped, a unaffected
+        assert mux.tick() == {"a": 1}
+        assert mux.streams == ("a",)
+        # admission mid-flight; duplicate names refused
+        mux.add("c", iter(range(5)))
+        with pytest.raises(ValueError, match="already open"):
+            mux.add("c", iter(range(5)))
+        assert mux.tick() == {"a": 2, "c": 0}
+        assert mux.tick() == {"c": 1}
+        assert mux.streams == ("c",)
+    finally:
+        mux.close()
+    assert mux.streams == ()
+    mux.close()                     # idempotent
+
+
 # ------------------------------------------------------------ block_n knob
 def test_block_n_env_override(monkeypatch):
     from repro.kernels.fastmix import DEFAULT_BLOCK_N, default_block_n
